@@ -1,0 +1,45 @@
+"""Paper Fig. 6 + Table I: CSR-dtANS compressed size vs the smallest of
+CSR/COO/SELL, for 64- and 32-bit values, with the Table-I success-rate
+grouping by total nonzeros and avg nonzeros/row."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.suite import cached_encode, cached_suite
+from repro.core.csr_dtans import encode_matrix
+from repro.sparse.formats import CSR, best_baseline_nbytes
+
+
+def run(small: bool = False):
+    rows = []
+    cells: dict[tuple, list] = {}
+    for name, a64 in cached_suite(small=small).items():
+        for bits, dtype in ((64, np.float64), (32, np.float32)):
+            a = CSR(a64.indptr, a64.indices,
+                    a64.values.astype(dtype), a64.shape)
+            t0 = time.time()
+            mat = cached_encode(name, a, bits)
+            enc_us = (time.time() - t0) * 1e6
+            bname, bb = best_baseline_nbytes(a)
+            ratio = bb / mat.nbytes
+            rows.append((f"fig6/{name}_{bits}b", enc_us,
+                         f"ratio={ratio:.3f};best={bname};"
+                         f"dtans_B={mat.nbytes};base_B={bb}"))
+            annzpr = a.nnz / max(a.shape[0], 1)
+            nnz_bin = ("<=2^10" if a.nnz <= 2 ** 10 else
+                       "<=2^15" if a.nnz <= 2 ** 15 else ">2^15")
+            key = (bits, nnz_bin, "annzpr<=10" if annzpr <= 10
+                   else "annzpr>10")
+            cells.setdefault(key, []).append(ratio > 1.0)
+    for (bits, nnz_bin, apr), oks in sorted(cells.items()):
+        rows.append((f"table1/{bits}b_{nnz_bin}_{apr}", 0.0,
+                     f"{sum(oks)}/{len(oks)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,61 @@
+"""Benchmark driver — one section per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.
+
+  fig4    — delta-encoding entropy reduction (random graph models)
+  fig6    — compression vs best of CSR/COO/SELL + Table I success rates
+  fig7/8  — modeled SpMVM speedup, warm (Table II) & cold (Table III)
+  fig9    — vs oracle format selector (AlphaSparse stand-in)
+  roofline— summary of the dry-run roofline table when present
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--small", action="store_true",
+                    help="trimmed sizes (CI)")
+    ap.add_argument("--only", default=None)
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (bench_compression, bench_delta_entropy,
+                            bench_format_selection, bench_spmv)
+
+    print("name,us_per_call,derived")
+    sections = {
+        "fig4": lambda: bench_delta_entropy.run(small=args.small),
+        "fig6": lambda: bench_compression.run(small=args.small),
+        "fig7": lambda: bench_spmv.run(small=args.small, warm=True),
+        "fig8": lambda: bench_spmv.run(small=args.small, warm=False,
+                                       measure=False),
+        "fig9": lambda: bench_format_selection.run(small=args.small),
+    }
+    for name, fn in sections.items():
+        if args.only and args.only != name:
+            continue
+        for row in fn():
+            print(",".join(str(x) for x in row), flush=True)
+
+    # roofline summary from dry-run artifacts, if present
+    ddir = os.path.join(os.path.dirname(__file__), "..",
+                        "experiments", "dryrun")
+    if os.path.isdir(ddir) and not args.only:
+        for f in sorted(os.listdir(ddir)):
+            if not f.endswith(".json"):
+                continue
+            rec = json.load(open(os.path.join(ddir, f)))
+            if rec.get("status") != "ok":
+                continue
+            r = rec["roofline"]
+            print(f"roofline/{rec['arch']}_{rec['shape']}_{rec['mesh']},"
+                  f"0.0,dom={r['dominant']};compute_s={r['compute_s']:.3e};"
+                  f"memory_s={r['memory_s']:.3e};"
+                  f"collective_s={r['collective_s']:.3e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Conjugate-gradient solve with an entropy-coded system matrix — the
+paper's headline scientific-computing use case (iterative solvers re-read
+the same matrix every iteration; compression cuts the bytes per iteration).
+
+    PYTHONPATH=src python examples/cg_solver.py
+"""
+
+import numpy as np
+
+from repro.core.csr_dtans import encode_matrix
+from repro.kernels import ops
+from repro.kernels.pack import pack_matrix
+from repro.sparse.formats import best_baseline_nbytes
+from repro.sparse.random_graphs import stencil_2d
+
+
+def cg(spmv, b, n, tol=1e-8, maxiter=300):
+    x = np.zeros(n)
+    r = b - spmv(x)
+    p = r.copy()
+    rs = r @ r
+    for it in range(maxiter):
+        ap = spmv(p)
+        alpha = rs / (p @ ap)
+        x += alpha * p
+        r -= alpha * ap
+        rs_new = r @ r
+        if np.sqrt(rs_new) < tol:
+            return x, it + 1
+        p = r + (rs_new / rs) * p
+        rs = rs_new
+    return x, maxiter
+
+
+def main():
+    a = stencil_2d(48)          # SPD Laplacian, 2304 unknowns
+    n = a.shape[0]
+    mat = encode_matrix(a, lane_width=128)
+    pm = pack_matrix(mat)
+    _, bb = best_baseline_nbytes(a)
+    print(f"system: {n} unknowns, nnz={a.nnz}; matrix bytes/iteration "
+          f"{mat.nbytes:,} (dtANS) vs {bb:,} (best uncompressed)")
+
+    rng = np.random.default_rng(0)
+    x_true = rng.standard_normal(n)
+    b = a.to_dense() @ x_true
+
+    x, iters = cg(lambda v: np.asarray(ops.spmv(pm, v)), b, n)
+    err = np.linalg.norm(x - x_true) / np.linalg.norm(x_true)
+    print(f"CG converged in {iters} iterations, rel. error {err:.2e}")
+    assert err < 1e-6
+    print("solution matches: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Serve a pruned LM with an entropy-coded (CSR-dtANS) projection matrix —
+the paper's pruned-LLM-inference motivation (Section I) end to end:
+
+  1. train-free setup: init a SmolLM-family model;
+  2. magnitude-prune + 8-bit-codebook the LM head (vocab x d — the largest
+     matrix of a small LM, matvec-bound at decode);
+  3. serve a batch of requests with the engine; verify the sparse-head
+     logits track the dense ones and report the compression.
+
+    PYTHONPATH=src python examples/sparse_inference.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.models import api
+from repro.serving.engine import Engine
+from repro.serving.sparse_linear import SparseLinear
+
+
+def main():
+    cfg = get_smoke("smollm-135m").with_(vocab=512, d_model=128,
+                                         n_heads=8, n_kv_heads=4)
+    rng = jax.random.PRNGKey(0)
+    params = api.init_params(cfg, rng)
+
+    # --- compress the LM head -------------------------------------------
+    emb = params["embed"]
+    w = np.asarray(emb["head"] if "head" in emb else emb["tok"].T,
+                   dtype=np.float32)                     # (d, vocab)
+    sl = SparseLinear.from_dense(w, sparsity=0.7, value_bits=6)
+    print(f"LM head: dense {sl.dense_bytes:,} B -> CSR-dtANS "
+          f"{sl.compressed_bytes:,} B "
+          f"({sl.compression_vs_dense:.2f}x vs dense, "
+          f"{sl.compression_vs_best_sparse:.2f}x vs best sparse format)")
+
+    # --- logits parity: sparse head vs its own dense reconstruction ------
+    h = jax.random.normal(jax.random.PRNGKey(1), (4, 1, cfg.d_model),
+                          dtype=jnp.float32)
+    ls = np.asarray(sl.apply(h))
+    ld = np.asarray(sl.apply_dense_reference(h))
+    np.testing.assert_allclose(ls, ld, rtol=1e-4, atol=1e-4)
+    agree = (ls.argmax(-1) == ld.argmax(-1)).mean()
+    print(f"sparse-head decode == dense(pruned) reference: OK "
+          f"(argmax agreement {agree:.0%})")
+
+    # --- batched serving ---------------------------------------------------
+    eng = Engine(cfg, params, slots=4, max_seq=48)
+    rng_np = np.random.default_rng(0)
+    reqs = [eng.submit(rng_np.integers(0, cfg.vocab, size=5), 8)
+            for _ in range(6)]
+    eng.run_until_drained()
+    done = sum(r.done for r in reqs)
+    toks = sum(len(r.out) for r in reqs)
+    print(f"served {done}/{len(reqs)} requests, {toks} tokens generated")
+    assert done == len(reqs)
+    print("batched serving: OK")
+
+
+if __name__ == "__main__":
+    main()

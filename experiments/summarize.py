@@ -1,0 +1,87 @@
+"""Summarize dry-run JSONs into the EXPERIMENTS.md roofline table."""
+
+import json
+import os
+import sys
+
+DDIR = os.path.join(os.path.dirname(__file__), "dryrun")
+
+
+def load(mesh="single"):
+    rows = []
+    for f in sorted(os.listdir(DDIR)):
+        if not f.endswith(f"__{mesh}.json"):
+            continue
+        rec = json.load(open(os.path.join(DDIR, f)))
+        rows.append(rec)
+    return rows
+
+
+def table(mesh="single", fmt="md"):
+    rows = load(mesh)
+    out = []
+    hdr = ("| arch | shape | kind | compute s | memory s | collective s | "
+           "dominant | MODEL_FLOPS/HLO | live GiB | fits |")
+    sep = "|" + "---|" * 10
+    out += [hdr, sep]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                       f"skip | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | "
+                       f"| |")
+            continue
+        ro = r["roofline"]
+        m = r["memory"]
+        ur = r.get("useful_flops_ratio")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | "
+            f"{ro['compute_s']:.2e} | {ro['memory_s']:.2e} | "
+            f"{ro['collective_s']:.2e} | {ro['dominant']} | "
+            f"{ur:.2f} | {m['peak_live_bytes']/2**30:.2f} | "
+            f"{'Y' if m['fits_hbm'] else 'N'} |")
+    return "\n".join(out)
+
+
+def pick_hillclimb():
+    """Worst roofline fraction / most collective-bound / paper-representative."""
+    rows = [r for r in load("single") if r["status"] == "ok"]
+    def frac(r):   # compute / total: lower = further from compute roofline
+        ro = r["roofline"]
+        tot = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+        return ro["compute_s"] / tot if tot else 1.0
+    worst = min(rows, key=frac)
+    coll = max(rows, key=lambda r: (r["roofline"]["collective_s"]
+                                    / max(r["roofline"]["compute_s"]
+                                          + r["roofline"]["memory_s"],
+                                          1e-12)))
+    print("worst roofline fraction:", worst["arch"], worst["shape"],
+          f"frac={frac(worst):.4f}")
+    print("most collective-bound:", coll["arch"], coll["shape"],
+          f"coll={coll['roofline']['collective_s']:.2e}")
+    srt = sorted(rows, key=frac)
+    for r in srt[:8]:
+        ro = r["roofline"]
+        print(f"  {r['arch']:22s} {r['shape']:12s} frac={frac(r):.4f} "
+              f"dom={ro['dominant']} c/m/x={ro['compute_s']:.2e}/"
+              f"{ro['memory_s']:.2e}/{ro['collective_s']:.2e}")
+
+
+def write_md():
+    path = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+    text = open(path).read()
+    text = text.replace("<!-- ROOFLINE_TABLE_SINGLE -->", table("single"))
+    text = text.replace("<!-- ROOFLINE_TABLE_MULTI -->", table("multi"))
+    open(path, "w").write(text)
+    print("EXPERIMENTS.md tables written")
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "pick":
+        pick_hillclimb()
+    elif len(sys.argv) > 1 and sys.argv[1] == "write-md":
+        write_md()
+    else:
+        print(table(sys.argv[1] if len(sys.argv) > 1 else "single"))

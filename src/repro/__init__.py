@@ -1,0 +1,14 @@
+"""repro: JAX/TPU reproduction of "Fast Entropy Decoding for Sparse MVM on GPUs".
+
+The dtANS codec works on 32-bit words with up-to-96-bit intermediate decoder
+state (held as uint64 limb pairs, mirroring the paper's use of ``__umul_hi``
+on GPU). JAX therefore runs with x64 enabled, package-wide. All model /
+training code uses *explicit* dtypes (bf16/f32/i32) so nothing silently
+widens; ``tests/test_dryrun.py`` asserts no f64/s64 leaks into lowered HLO.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

@@ -1,0 +1,1 @@
+# Deterministic, shardable, resumable synthetic data pipeline.

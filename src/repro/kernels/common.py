@@ -1,0 +1,204 @@
+"""Shared jnp building blocks for the dtANS decode kernels.
+
+`segment_step` is the lock-step decode of ONE segment across all lanes —
+the same function is traced by the pure-jnp oracle (ref.py) and by the
+Pallas kernel bodies (dtans_spmv.py / dtans_decode.py), so the kernel and
+its oracle cannot drift apart.
+
+Integer story (paper Section IV-F "Positioning of checks"): the decoder
+state d (and radix r) is held in three 32-bit limbs inside uint64 lanes.
+Digits are accumulated in groups whose radix product fits in 32 bits
+("accumulate 4 returned digits into a 4-byte digit/base pair"), then folded
+into the limbs with one 64-bit multiply-add per limb — the TPU stand-in for
+the paper's `mul.lo`/`__umul_hi` pair.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import DtansParams
+
+_M32 = 0xFFFFFFFF  # python ints stay weak-typed: safe inside Pallas kernels
+
+
+class DecodeArrays(NamedTuple):
+    """Per-slice arrays, already loaded into VMEM/registers."""
+    stream: jax.Array    # (Wmax,) uint64
+    esc: jax.Array       # (T, Emax) uint64
+    tab_symbol: jax.Array  # (T, K) uint64
+    tab_digit: jax.Array   # (T, K) int32
+    tab_base: jax.Array    # (T, K) int32
+    tab_is_esc: jax.Array  # (T, K) int32
+    ns: jax.Array        # (L,) int32
+    nnz: jax.Array       # (L,) int32
+
+
+class DecodeState(NamedTuple):
+    w: jax.Array         # (L, o) uint64
+    d: jax.Array         # (3, L) uint64 limbs
+    r: jax.Array         # (3, L) uint64 limbs
+    cursor: jax.Array    # () int32 — common stream cursor
+    esc_cur: jax.Array   # (T,) int32
+    col: jax.Array       # (L,) int64 — running column per lane
+    nsegs: jax.Array     # (L,) int32
+
+
+def _limb_mul_add(d, m, a):
+    t0 = d[0] * m + a
+    l0 = t0 & _M32
+    c0 = t0 >> 32
+    t1 = d[1] * m + c0
+    l1 = t1 & _M32
+    c1 = t1 >> 32
+    t2 = d[2] * m + c1
+    return jnp.stack([l0, l1, t2 & _M32])
+
+
+def _limb_ge_w(r, w_bits: int):
+    hi = (r[1] > 0) | (r[2] > 0)
+    if w_bits == 32:
+        return hi
+    return hi | ((r[0] >> w_bits) > 0)
+
+
+def _limb_shr(d, w_bits: int):
+    sh = w_bits
+    full0 = d[0] | (d[1] << 32)
+    full1 = d[1] | (d[2] << 32)
+    return jnp.stack([(full0 >> sh) & _M32, (full1 >> sh) & _M32,
+                      d[2] >> sh])
+
+
+def _claim(stream, cursor, take):
+    """Consumption-order claim: lanes with ``take`` read consecutive words
+    starting at ``cursor`` (vectorized ballot+popc, DESIGN.md §2)."""
+    rank = jnp.cumsum(take.astype(jnp.int32)) - 1
+    idx = cursor + rank
+    idx = jnp.clip(idx, 0, stream.shape[0] - 1)
+    words = jnp.take(stream, idx, axis=0)
+    return words, cursor + jnp.sum(take, dtype=jnp.int32)
+
+
+def init_state(arr: DecodeArrays, params: DtansParams) -> DecodeState:
+    l, o = params.l, params.o
+    L = arr.ns.shape[0]
+    T = arr.esc.shape[0]
+    nsegs = (arr.ns + (l - 1)) // l
+    live = arr.ns > 0
+    cursor = jnp.int32(0)
+    w = jnp.zeros((L, o), dtype=jnp.uint64)
+    for k in range(o):
+        words, cursor = _claim(arr.stream, cursor, live)
+        w = w.at[:, k].set(jnp.where(live, words, 0))
+    return DecodeState(
+        w=w,
+        d=jnp.zeros((3, L), dtype=jnp.uint64),
+        r=jnp.zeros((3, L), dtype=jnp.uint64).at[0].set(1),
+        cursor=cursor,
+        esc_cur=jnp.zeros((T,), dtype=jnp.int32),
+        col=jnp.zeros((L,), dtype=jnp.int64),
+        nsegs=nsegs,
+    )
+
+
+def segment_step(j, state: DecodeState, arr: DecodeArrays,
+                 params: DtansParams, pattern: tuple):
+    """Decode segment ``j`` on all lanes.
+
+    Returns (new_state, cols, vals_bits, valid):
+      cols      (l//2, L) int64  — absolute column index per nonzero
+      vals_bits (l//2, L) uint64 — raw value bit patterns
+      valid     (l//2, L) bool   — nonzero exists (tail masking)
+    """
+    W_bits, K_bits = params.w_bits, params.k_bits
+    l, o, f = params.l, params.o, params.f
+    Km1 = params.K - 1
+    Wm1 = params.W - 1
+    active = j < state.nsegs
+
+    # ---- unpack + table lookups (static unroll over l positions) --------
+    wle = state.w[:, ::-1]  # little-endian word view
+    syms, digs, bass = [], [], []
+    esc_cur = state.esc_cur
+    for k in range(l):
+        lo = k * K_bits
+        wi, sh = lo // W_bits, lo % W_bits
+        pair = wle[:, wi]
+        if wi + 1 < o:
+            pair = pair | (wle[:, wi + 1] << W_bits)
+        slot = (pair >> sh) & Km1
+        t = pattern[k]
+        sym = jnp.take(arr.tab_symbol[t], slot, axis=0)
+        is_esc = (jnp.take(arr.tab_is_esc[t], slot, axis=0) > 0) & active
+        rank = jnp.cumsum(is_esc.astype(jnp.int32)) - 1
+        eidx = jnp.clip(esc_cur[t] + rank, 0, arr.esc.shape[1] - 1)
+        esym = jnp.take(arr.esc[t], eidx, axis=0)
+        sym = jnp.where(is_esc, esym, sym)
+        esc_cur = esc_cur.at[t].add(jnp.sum(is_esc, dtype=jnp.int32))
+        dig = jnp.where(active, jnp.take(arr.tab_digit[t], slot, axis=0), 0)
+        bas = jnp.where(active, jnp.take(arr.tab_base[t], slot, axis=0), 1)
+        syms.append(sym)
+        digs.append(dig.astype(jnp.uint64))
+        bass.append(bas.astype(jnp.uint64))
+
+    # ---- positions: even = delta, odd = value bits -----------------------
+    cols, vals_bits, valid = [], [], []
+    col = state.col
+    for i in range(l // 2):
+        q = j * (l // 2) + i                      # nonzero index in row
+        ok = (q < arr.nnz) & active
+        col = col + jnp.where(ok, syms[2 * i].astype(jnp.int64), 0)
+        cols.append(col)
+        vals_bits.append(syms[2 * i + 1])
+        valid.append(ok)
+
+    # ---- fold digits into limb state (groups fit 32 bits) ---------------
+    d, r = state.d, state.r
+    g = max(1, 32 // params.m_bits)
+    for g0 in range(0, l, g):
+        gacc = jnp.zeros_like(syms[0])
+        racc = jnp.ones_like(syms[0])
+        for k in range(g0, min(g0 + g, l)):
+            gacc = gacc * bass[k] + digs[k]
+            racc = racc * bass[k]
+        d = _limb_mul_add(d, racc, gacc)
+        r = _limb_mul_add(r, racc, jnp.zeros_like(racc))
+
+    # ---- refill ----------------------------------------------------------
+    refill = active & (j < state.nsegs - 1)
+    w = state.w
+    cursor = state.cursor
+    for k in range(o):
+        if k < f:
+            cond = _limb_ge_w(r, W_bits) & refill
+            wk = d[0] & Wm1
+            d = jnp.where(cond, _limb_shr(d, W_bits), d)
+            r = jnp.where(cond, _limb_shr(r, W_bits), r)
+            popl = refill & ~cond
+        else:
+            cond = jnp.zeros_like(refill)
+            wk = jnp.zeros_like(state.w[:, 0])
+            popl = refill
+        popped, cursor = _claim(arr.stream, cursor, popl)
+        wk = jnp.where(popl, popped, wk)
+        w = w.at[:, k].set(jnp.where(refill, wk, w[:, k]))
+
+    new_state = DecodeState(w=w, d=d, r=r, cursor=cursor, esc_cur=esc_cur,
+                            col=col, nsegs=state.nsegs)
+    return (new_state, jnp.stack(cols), jnp.stack(vals_bits),
+            jnp.stack(valid))
+
+
+def bits_to_value(bits: jax.Array, dtype) -> jax.Array:
+    """Reinterpret raw uint64 symbol bits as float32/float64 values."""
+    if dtype == jnp.float64:
+        return jax.lax.bitcast_convert_type(bits, jnp.float64)
+    if dtype == jnp.float32:
+        return jax.lax.bitcast_convert_type(
+            bits.astype(jnp.uint32), jnp.float32)
+    raise TypeError(f"unsupported dtype {dtype}")

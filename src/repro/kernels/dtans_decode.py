@@ -1,0 +1,85 @@
+"""Decode-only dtANS Pallas kernel (the library's "decompression kernel").
+
+Same lock-step machinery as the fused SpMVM kernel but materializes
+(columns, values) per row instead of contracting against x. Output is the
+padded (S, L, max_nnz) layout; cols == -1 marks tail padding.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.params import DtansParams
+from repro.kernels.common import (DecodeArrays, bits_to_value, init_state,
+                                  segment_step)
+
+
+def _decode_kernel(stream_ref, esc_ref, ns_ref, nnz_ref, sym_ref, dig_ref,
+                   base_ref, isesc_ref, cols_ref, vals_ref, *,
+                   params: DtansParams, pattern: tuple, max_nseg: int,
+                   out_dtype):
+    arr = DecodeArrays(
+        stream=stream_ref[0, :],
+        esc=esc_ref[:, 0, :],
+        tab_symbol=sym_ref[...],
+        tab_digit=dig_ref[...],
+        tab_base=base_ref[...],
+        tab_is_esc=isesc_ref[...],
+        ns=ns_ref[0, :],
+        nnz=nnz_ref[0, :],
+    )
+    state = init_state(arr, params)
+    h = params.l // 2
+
+    def body(j, state):
+        state, cols, vbits, valid = segment_step(j, state, arr, params,
+                                                 pattern)
+        vals = bits_to_value(vbits, out_dtype)
+        cols_blk = jnp.where(valid, cols, -1).astype(jnp.int32).T  # (L, h)
+        vals_blk = jnp.where(valid, vals, 0).T
+        pl.store(cols_ref, (0, slice(None), pl.dslice(j * h, h)), cols_blk)
+        pl.store(vals_ref, (0, slice(None), pl.dslice(j * h, h)), vals_blk)
+        return state
+
+    jax.lax.fori_loop(0, max_nseg, body, state)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "params", "pattern", "max_nseg", "lane_width", "out_dtype", "interpret"))
+def dtans_decode_pallas(stream, esc, ns, nnz, tabs, *, params, pattern,
+                        max_nseg, lane_width, out_dtype, interpret=True):
+    S, Wmax = stream.shape
+    T, _, Emax = esc.shape
+    K = params.K
+    h = params.l // 2
+    max_nnz = max_nseg * h
+    kernel = functools.partial(_decode_kernel, params=params,
+                               pattern=pattern, max_nseg=max_nseg,
+                               out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((1, Wmax), lambda s: (s, 0)),
+            pl.BlockSpec((T, 1, Emax), lambda s: (0, s, 0)),
+            pl.BlockSpec((1, lane_width), lambda s: (s, 0)),
+            pl.BlockSpec((1, lane_width), lambda s: (s, 0)),
+            pl.BlockSpec((T, K), lambda s: (0, 0)),
+            pl.BlockSpec((T, K), lambda s: (0, 0)),
+            pl.BlockSpec((T, K), lambda s: (0, 0)),
+            pl.BlockSpec((T, K), lambda s: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, lane_width, max_nnz), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, lane_width, max_nnz), lambda s: (s, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, lane_width, max_nnz), jnp.int32),
+            jax.ShapeDtypeStruct((S, lane_width, max_nnz), out_dtype),
+        ],
+        interpret=interpret,
+    )(stream, esc, ns, nnz, *tabs)

@@ -1,0 +1,96 @@
+"""Fused dtANS-decode + SpMVM Pallas TPU kernel (the paper's Fig. 1 right).
+
+Grid: one program per slice of ``lane_width`` rows (the TPU translation of
+one GPU warp per 32-row slice). Per program, the kernel holds in VMEM:
+
+  stream block   (1, Wmax)  x 8 B   — this slice's interleaved word stream
+  escape block   (T, 1, Emax) x 8 B — this slice's escape streams
+  coding tables  (T, K) x 20 B      — shared by every program (K = 4096
+                                      -> 80 KB/table; fits v5e VMEM easily)
+  x              (n,) x itemsize    — the dense input vector
+  y block        (1, L) x itemsize  — output rows for this slice
+
+The decode loop is `lax.fori_loop` over the matrix-wide max segment count;
+lanes past their row's end are masked (same lock-step schedule as
+`repro.core.dtans_vec.decode_lanes`). All gathers (stream claims, table
+lookups, x[col]) are `jnp.take` over VMEM-resident blocks — the TPU
+equivalent of the paper's shared-memory lookups + coalesced loads
+(DESIGN.md §2 spells out the mapping and its costs).
+
+Validated with ``interpret=True`` (this container is CPU-only); the target
+is TPU v5e. 64-bit lane arithmetic lowers to 32-bit pairs on TPU — the
+native-width variant is a recorded perf iteration, not a correctness issue.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.params import DtansParams
+from repro.kernels.common import (DecodeArrays, bits_to_value, init_state,
+                                  segment_step)
+
+
+def _spmv_kernel(stream_ref, esc_ref, ns_ref, nnz_ref, sym_ref, dig_ref,
+                 base_ref, isesc_ref, x_ref, y_ref, *, params: DtansParams,
+                 pattern: tuple, max_nseg: int, out_dtype):
+    arr = DecodeArrays(
+        stream=stream_ref[0, :],
+        esc=esc_ref[:, 0, :],
+        tab_symbol=sym_ref[...],
+        tab_digit=dig_ref[...],
+        tab_base=base_ref[...],
+        tab_is_esc=isesc_ref[...],
+        ns=ns_ref[0, :],
+        nnz=nnz_ref[0, :],
+    )
+    x = x_ref[...]
+    n = x.shape[0]
+    state = init_state(arr, params)
+    acc0 = jnp.zeros((arr.ns.shape[0],), dtype=out_dtype)
+
+    def body(j, carry):
+        state, acc = carry
+        state, cols, vbits, valid = segment_step(j, state, arr, params,
+                                                 pattern)
+        vals = bits_to_value(vbits, out_dtype)
+        xg = jnp.take(x, jnp.clip(cols, 0, n - 1), axis=0)
+        return state, acc + jnp.sum(jnp.where(valid, vals * xg, 0), axis=0)
+
+    _, acc = jax.lax.fori_loop(0, max_nseg, body, (state, acc0))
+    y_ref[0, :] = acc
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "params", "pattern", "max_nseg", "lane_width", "out_dtype", "interpret"))
+def dtans_spmv_pallas(stream, esc, ns, nnz, tabs, x, *, params, pattern,
+                      max_nseg, lane_width, out_dtype, interpret=True):
+    """pallas_call wrapper: returns per-slice row results (S, L)."""
+    S, Wmax = stream.shape
+    T, _, Emax = esc.shape
+    K = params.K
+    n = x.shape[0]
+    kernel = functools.partial(_spmv_kernel, params=params, pattern=pattern,
+                               max_nseg=max_nseg, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((1, Wmax), lambda s: (s, 0)),      # stream slice
+            pl.BlockSpec((T, 1, Emax), lambda s: (0, s, 0)),  # escapes
+            pl.BlockSpec((1, lane_width), lambda s: (s, 0)),  # ns
+            pl.BlockSpec((1, lane_width), lambda s: (s, 0)),  # nnz
+            pl.BlockSpec((T, K), lambda s: (0, 0)),          # tab symbol
+            pl.BlockSpec((T, K), lambda s: (0, 0)),          # tab digit
+            pl.BlockSpec((T, K), lambda s: (0, 0)),          # tab base
+            pl.BlockSpec((T, K), lambda s: (0, 0)),          # tab is_esc
+            pl.BlockSpec((n,), lambda s: (0,)),              # x (whole)
+        ],
+        out_specs=pl.BlockSpec((1, lane_width), lambda s: (s, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, lane_width), out_dtype),
+        interpret=interpret,
+    )(stream, esc, ns, nnz, *tabs, x)

@@ -1,0 +1,75 @@
+"""Public jit'd entry points for the kernels.
+
+`spmv` is the user-facing  y = A x + y  on a CSR-dtANS matrix: it packs the
+format once (cached on the object), moves tensors to device, and dispatches
+to the fused Pallas kernel (interpret=True on CPU hosts, compiled on TPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.csr_dtans import CSRdtANS
+from repro.kernels.dtans_decode import dtans_decode_pallas
+from repro.kernels.dtans_spmv import dtans_spmv_pallas
+from repro.kernels.pack import PackedMatrix, pack_matrix
+from repro.kernels.sell_spmv import PackedSELL, sell_spmv_pallas
+
+_PACK_CACHE_FIELD = "_packed_cache"
+
+
+def _out_dtype(pm: PackedMatrix):
+    return jnp.float64 if pm.dtype == np.float64 else jnp.float32
+
+
+def get_packed(mat: CSRdtANS) -> PackedMatrix:
+    pm = getattr(mat, _PACK_CACHE_FIELD, None)
+    if pm is None:
+        pm = pack_matrix(mat)
+        object.__setattr__(mat, _PACK_CACHE_FIELD, pm)
+    return pm
+
+
+def _tabs(pm: PackedMatrix):
+    return (jnp.asarray(pm.tab_symbol), jnp.asarray(pm.tab_digit),
+            jnp.asarray(pm.tab_base), jnp.asarray(pm.tab_is_esc))
+
+
+def spmv(mat: CSRdtANS | PackedMatrix, x, y=None, *,
+         interpret: bool = True) -> jax.Array:
+    """y = A x + y with on-the-fly dtANS decoding (fused Pallas kernel)."""
+    pm = get_packed(mat) if isinstance(mat, CSRdtANS) else mat
+    dt = _out_dtype(pm)
+    m, n = pm.shape
+    x = jnp.asarray(x, dtype=dt)
+    acc = dtans_spmv_pallas(
+        jnp.asarray(pm.stream), jnp.asarray(pm.esc), jnp.asarray(pm.ns),
+        jnp.asarray(pm.nnz), _tabs(pm), x,
+        params=pm.params, pattern=pm.pattern, max_nseg=pm.max_nseg,
+        lane_width=pm.lane_width, out_dtype=dt, interpret=interpret)
+    out = acc.reshape(-1)[:m]
+    if y is not None:
+        out = out + jnp.asarray(y, dtype=dt)
+    return out
+
+
+def decode(mat: CSRdtANS | PackedMatrix, *, interpret: bool = True):
+    """Decompress to padded (S, L, max_nnz) (cols, vals); cols==-1 pads."""
+    pm = get_packed(mat) if isinstance(mat, CSRdtANS) else mat
+    dt = _out_dtype(pm)
+    return dtans_decode_pallas(
+        jnp.asarray(pm.stream), jnp.asarray(pm.esc), jnp.asarray(pm.ns),
+        jnp.asarray(pm.nnz), _tabs(pm),
+        params=pm.params, pattern=pm.pattern, max_nseg=pm.max_nseg,
+        lane_width=pm.lane_width, out_dtype=dt, interpret=interpret)
+
+
+def sell_spmv(ps: PackedSELL, x, *, interpret: bool = True) -> jax.Array:
+    """Baseline SELL SpMVM: y = A x."""
+    m, _ = ps.shape
+    acc = sell_spmv_pallas(jnp.asarray(ps.indices), jnp.asarray(ps.values),
+                           jnp.asarray(x, dtype=ps.values.dtype),
+                           interpret=interpret)
+    return acc.reshape(-1)[:m]

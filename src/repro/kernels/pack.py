@@ -1,0 +1,94 @@
+"""Pack a CSRdtANS matrix into dense, kernel-ready tensors.
+
+The production format stores one flat stream with per-slice offsets. The
+Pallas kernel wants *static* block shapes, so we pad every slice's stream
+(and escape stream) to the matrix-wide maximum and expose them as
+(n_slices, max_*) tensors. The padding is address padding only — it is NOT
+counted in the format's compressed size (CSRdtANS.nbytes), exactly like the
+paper's kernels, which DMA whole cache lines regardless of stream length.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.csr_dtans import CSRdtANS
+from repro.core.params import DtansParams
+
+
+@dataclasses.dataclass
+class PackedMatrix:
+    """Kernel-ready CSR-dtANS. All arrays are numpy; ops.py moves to jnp."""
+    stream: np.ndarray      # (S, Wmax) uint64 (< 2^32)
+    esc: np.ndarray         # (T, S, Emax) uint64
+    ns: np.ndarray          # (S, L) int32 — symbols per lane (2*nnz)
+    nnz: np.ndarray         # (S, L) int32 — nonzeros per lane
+    row_valid: np.ndarray   # (S, L) bool — lane maps to a real row
+    tab_symbol: np.ndarray  # (T, K) uint64
+    tab_digit: np.ndarray   # (T, K) int32
+    tab_base: np.ndarray    # (T, K) int32
+    tab_is_esc: np.ndarray  # (T, K) int32 (0/1)
+    pattern: tuple          # static, length l
+    params: DtansParams     # static
+    shape: tuple
+    dtype: np.dtype
+    lane_width: int
+    max_nseg: int           # static loop bound
+
+    @property
+    def n_slices(self) -> int:
+        return int(self.stream.shape[0])
+
+
+def pack_matrix(mat: CSRdtANS) -> PackedMatrix:
+    S = mat.n_slices
+    L = mat.lane_width
+    T = len(mat.tables)
+    l = mat.params.l
+    m = mat.shape[0]
+
+    w_lens = np.diff(mat.slice_offsets)
+    Wmax = max(int(w_lens.max()) if S else 0, 1)
+    stream = np.zeros((S, Wmax), dtype=np.uint64)
+    for s in range(S):
+        lo, hi = mat.slice_offsets[s], mat.slice_offsets[s + 1]
+        stream[s, :hi - lo] = mat.stream[lo:hi]
+
+    e_lens = np.diff(mat.esc_offsets, axis=0)  # (S, T)
+    Emax = max(int(e_lens.max()) if S else 0, 1)
+    esc = np.zeros((T, S, Emax), dtype=np.uint64)
+    for t in range(T):
+        for s in range(S):
+            lo, hi = mat.esc_offsets[s, t], mat.esc_offsets[s + 1, t]
+            esc[t, s, :hi - lo] = mat.esc_streams[t][lo:hi]
+
+    nnz = np.zeros((S, L), dtype=np.int32)
+    row_valid = np.zeros((S, L), dtype=bool)
+    for s in range(S):
+        r0, r1 = s * L, min((s + 1) * L, m)
+        nnz[s, :r1 - r0] = mat.row_nnz[r0:r1]
+        row_valid[s, :r1 - r0] = True
+    ns = 2 * nnz
+
+    nsegs = (ns + l - 1) // l
+    max_nseg = max(int(nsegs.max()) if S else 0, 1)
+
+    return PackedMatrix(
+        stream=stream,
+        esc=esc,
+        ns=ns.astype(np.int32),
+        nnz=nnz,
+        row_valid=row_valid,
+        tab_symbol=mat.stacked.symbol.astype(np.uint64),
+        tab_digit=mat.stacked.digit.astype(np.int32),
+        tab_base=mat.stacked.base.astype(np.int32),
+        tab_is_esc=mat.stacked.is_esc.astype(np.int32),
+        pattern=tuple(int(p) for p in mat.pattern),
+        params=mat.params,
+        shape=mat.shape,
+        dtype=np.dtype(mat.dtype),
+        lane_width=L,
+        max_nseg=max_nseg,
+    )

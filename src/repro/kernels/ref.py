@@ -1,0 +1,114 @@
+"""Pure-jnp oracles for the dtANS kernels (no Pallas).
+
+`spmv_ref` / `decode_ref` vmap the shared lock-step segment decoder over
+slices. They are themselves validated against the numpy gold path
+(`repro.core.csr_dtans.spmv_gold`), which in turn is validated against the
+scalar big-int codec — a three-deep oracle chain.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.common import (DecodeArrays, bits_to_value, init_state,
+                                  segment_step)
+from repro.kernels.pack import PackedMatrix
+
+
+def _slice_spmv(stream, esc, ns, nnz, tabs, x, *, params, pattern,
+                max_nseg, out_dtype):
+    arr = DecodeArrays(stream=stream, esc=esc, tab_symbol=tabs[0],
+                       tab_digit=tabs[1], tab_base=tabs[2],
+                       tab_is_esc=tabs[3], ns=ns, nnz=nnz)
+    state = init_state(arr, params)
+    L = ns.shape[0]
+    n = x.shape[0]
+    acc0 = jnp.zeros((L,), dtype=out_dtype)
+
+    def body(j, carry):
+        state, acc = carry
+        state, cols, vbits, valid = segment_step(j, state, arr, params,
+                                                 pattern)
+        vals = bits_to_value(vbits, out_dtype)
+        xg = jnp.take(x, jnp.clip(cols, 0, n - 1), axis=0)
+        acc = acc + jnp.sum(jnp.where(valid, vals * xg, 0), axis=0)
+        return state, acc
+
+    _, acc = jax.lax.fori_loop(0, max_nseg, body, (state, acc0))
+    return acc
+
+
+def _slice_decode(stream, esc, ns, nnz, tabs, *, params, pattern, max_nseg,
+                  out_dtype):
+    arr = DecodeArrays(stream=stream, esc=esc, tab_symbol=tabs[0],
+                       tab_digit=tabs[1], tab_base=tabs[2],
+                       tab_is_esc=tabs[3], ns=ns, nnz=nnz)
+    state = init_state(arr, params)
+    L = ns.shape[0]
+    h = params.l // 2
+    cols0 = jnp.zeros((L, max_nseg * h), dtype=jnp.int32)
+    vals0 = jnp.zeros((L, max_nseg * h), dtype=out_dtype)
+
+    def body(j, carry):
+        state, cols_out, vals_out = carry
+        state, cols, vbits, valid = segment_step(j, state, arr, params,
+                                                 pattern)
+        vals = bits_to_value(vbits, out_dtype)
+        cols_blk = jnp.where(valid, cols, -1).astype(jnp.int32).T  # (L, h)
+        vals_blk = jnp.where(valid, vals, 0).T
+        cols_out = jax.lax.dynamic_update_slice(cols_out, cols_blk,
+                                                (0, j * h))
+        vals_out = jax.lax.dynamic_update_slice(vals_out, vals_blk,
+                                                (0, j * h))
+        return state, cols_out, vals_out
+
+    _, cols, vals = jax.lax.fori_loop(0, max_nseg, body,
+                                      (state, cols0, vals0))
+    return cols, vals
+
+
+def _tabs(pm: PackedMatrix):
+    return (jnp.asarray(pm.tab_symbol), jnp.asarray(pm.tab_digit),
+            jnp.asarray(pm.tab_base), jnp.asarray(pm.tab_is_esc))
+
+
+@functools.partial(jax.jit, static_argnames=("params", "pattern",
+                                             "max_nseg", "out_dtype"))
+def _spmv_ref_jit(stream, esc, ns, nnz, tabs, x, y, *, params, pattern,
+                  max_nseg, out_dtype):
+    f = functools.partial(_slice_spmv, tabs=tabs, x=x, params=params,
+                          pattern=pattern, max_nseg=max_nseg,
+                          out_dtype=out_dtype)
+    acc = jax.vmap(f)(stream, esc.transpose(1, 0, 2), ns, nnz)  # (S, L)
+    return y + acc.reshape(-1)[:y.shape[0]]
+
+
+def spmv_ref(pm: PackedMatrix, x: np.ndarray,
+             y: np.ndarray | None = None) -> jax.Array:
+    """Oracle y = A x + y with on-the-fly dtANS decode (pure jnp)."""
+    out_dtype = jnp.float64 if pm.dtype == np.float64 else jnp.float32
+    m, n = pm.shape
+    if y is None:
+        y = jnp.zeros((m,), dtype=out_dtype)
+    return _spmv_ref_jit(
+        jnp.asarray(pm.stream), jnp.asarray(pm.esc), jnp.asarray(pm.ns),
+        jnp.asarray(pm.nnz), _tabs(pm), jnp.asarray(x, dtype=out_dtype),
+        jnp.asarray(y, dtype=out_dtype),
+        params=pm.params, pattern=pm.pattern, max_nseg=pm.max_nseg,
+        out_dtype=out_dtype)
+
+
+def decode_ref(pm: PackedMatrix) -> tuple[jax.Array, jax.Array]:
+    """Oracle decompression: (cols, vals) as (S, L, max_nnz) padded arrays
+    (cols == -1 marks padding)."""
+    out_dtype = jnp.float64 if pm.dtype == np.float64 else jnp.float32
+    f = functools.partial(_slice_decode, tabs=_tabs(pm), params=pm.params,
+                          pattern=pm.pattern, max_nseg=pm.max_nseg,
+                          out_dtype=out_dtype)
+    return jax.jit(jax.vmap(f))(
+        jnp.asarray(pm.stream), jnp.asarray(pm.esc).transpose(1, 0, 2),
+        jnp.asarray(pm.ns), jnp.asarray(pm.nnz))

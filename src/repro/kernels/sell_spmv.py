@@ -1,0 +1,80 @@
+"""SELL-style SpMVM Pallas baseline kernel (uncompressed comparator).
+
+One program per slice of ``lane_width`` rows; the slice's (padded) indices
+and values live in VMEM as (L, Wg) blocks, x is gathered per column step.
+This is the "fastest cuSPARSE format" stand-in used by the benchmark
+harness to compare against the fused dtANS kernel under the same roofline
+model (both kernels are memory-bound; the ratio of bytes moved predicts the
+speedup, Section V-B of the paper).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.sparse.formats import CSR
+
+
+@dataclasses.dataclass
+class PackedSELL:
+    indices: np.ndarray   # (S, L, Wg) int32, -1 = padding
+    values: np.ndarray    # (S, L, Wg)
+    shape: tuple
+    lane_width: int
+
+
+def pack_sell(a: CSR, lane_width: int = 128) -> PackedSELL:
+    m, _ = a.shape
+    L = lane_width
+    S = (m + L - 1) // L
+    rnnz = np.diff(a.indptr)
+    Wg = max(int(rnnz.max()) if m else 0, 1)
+    idx = np.full((S, L, Wg), -1, dtype=np.int32)
+    val = np.zeros((S, L, Wg), dtype=a.values.dtype)
+    for i in range(m):
+        s, lane = divmod(i, L)
+        lo, hi = a.indptr[i], a.indptr[i + 1]
+        idx[s, lane, :hi - lo] = a.indices[lo:hi]
+        val[s, lane, :hi - lo] = a.values[lo:hi]
+    return PackedSELL(indices=idx, values=val, shape=a.shape,
+                      lane_width=L)
+
+
+def _sell_kernel(idx_ref, val_ref, x_ref, y_ref):
+    idx = idx_ref[0]          # (L, Wg)
+    val = val_ref[0]
+    x = x_ref[...]
+    mask = idx >= 0
+    xg = jnp.take(x, jnp.clip(idx, 0, x.shape[0] - 1), axis=0)
+    y_ref[0, :] = jnp.sum(jnp.where(mask, val * xg, 0), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sell_spmv_pallas(idx, val, x, interpret=True):
+    S, L, Wg = idx.shape
+    n = x.shape[0]
+    return pl.pallas_call(
+        _sell_kernel,
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((1, L, Wg), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, L, Wg), lambda s: (s, 0, 0)),
+            pl.BlockSpec((n,), lambda s: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, L), lambda s: (s, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, L), val.dtype),
+        interpret=interpret,
+    )(idx, val, x)
+
+
+def sell_spmv_ref(idx: np.ndarray, val: np.ndarray, x: np.ndarray):
+    """Pure-jnp oracle for the SELL kernel."""
+    mask = idx >= 0
+    xg = jnp.take(jnp.asarray(x), jnp.clip(idx, 0, x.shape[0] - 1), axis=0)
+    return jnp.sum(jnp.where(mask, val * xg, 0), axis=2)

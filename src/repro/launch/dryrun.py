@@ -1,0 +1,177 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
+512 placeholder CPU devices, proving the distribution config is coherent,
+and dump memory/cost/collective analyses for EXPERIMENTS.md.
+
+MUST be run as its own process (the XLA_FLAGS line above executes before
+any jax import, including `from repro...`).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m \
+        --shape train_4k --mesh single --out experiments/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import argparse     # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+import jax          # noqa: E402
+
+from repro import configs                                    # noqa: E402
+from repro.launch.mesh import make_production_mesh            # noqa: E402
+from repro.launch.hlo_cost import analyze as hlo_analyze  # noqa: E402
+from repro.launch.roofline import (HBM_PER_CHIP, Roofline,    # noqa: E402
+                                   collective_bytes, model_flops)
+from repro.launch.steps import build_cell, cell_is_skipped    # noqa: E402
+from repro.models.config import SHAPES                        # noqa: E402
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             out_dir: str | None = None, verbose: bool = True,
+             save_hlo: bool = False, **policy) -> dict:
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "policy": {k: v for k, v in policy.items() if v is not None}}
+    skip = cell_is_skipped(arch, shape_name)
+    if skip:
+        rec.update(status="skipped", reason=skip)
+        _emit(rec, out_dir, verbose)
+        return rec
+    try:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        t0 = time.time()
+        cell = build_cell(arch, shape_name, mesh, **policy)
+        lowered = cell.lower(mesh)
+        t1 = time.time()
+        lowered_text = lowered.as_text()
+        if "f64[" in lowered_text or "s64[" in lowered_text:
+            rec["dtype_leak"] = True  # x64 discipline violation (see tests)
+        compiled = lowered.compile()
+        t2 = time.time()
+
+        mem = compiled.memory_analysis()
+        mem_rec = {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "generated_code_bytes": int(mem.generated_code_size_in_bytes),
+        }
+        live = (mem_rec["argument_bytes"] + mem_rec["output_bytes"]
+                + mem_rec["temp_bytes"] - mem_rec["alias_bytes"])
+        mem_rec["peak_live_bytes"] = int(live)
+        mem_rec["fits_hbm"] = bool(live <= HBM_PER_CHIP)
+
+        # XLA's cost_analysis() counts while-loop bodies once (verified in
+        # tests/test_roofline.py); use the trip-count-aware walker instead.
+        xla_costs = compiled.cost_analysis()
+        hlo_text = compiled.as_text()
+        if save_hlo and out_dir:
+            import gzip
+            os.makedirs(out_dir, exist_ok=True)
+            with gzip.open(os.path.join(
+                    out_dir, f"{arch}__{shape_name}__{mesh_kind}.hlo.gz"),
+                    "wt") as f:
+                f.write(hlo_text)
+        walked = hlo_analyze(hlo_text)
+        flops = float(walked.flops)
+        hbm = float(walked.bytes)
+        coll = {"weighted": walked.coll_wire, "raw": walked.coll_raw,
+                "counts": walked.coll_counts,
+                "total_weighted": walked.collective_bytes,
+                "total_raw": sum(walked.coll_raw.values())}
+        roof = Roofline.from_costs(flops, hbm, coll["total_weighted"])
+        mf = model_flops(cell.cfg, cell.shape, cell.kind)
+        chips = mesh.devices.size
+        rec.update(
+            status="ok",
+            kind=cell.kind,
+            lower_s=round(t1 - t0, 2),
+            compile_s=round(t2 - t1, 2),
+            chips=chips,
+            memory=mem_rec,
+            flops_per_device=flops,
+            hbm_bytes_per_device=hbm,
+            collectives=coll,
+            roofline=roof.to_dict(),
+            model_flops_global=mf,
+            model_flops_per_device=mf / chips,
+            useful_flops_ratio=(mf / chips) / flops if flops else None,
+            xla_cost_analysis={"flops": float(xla_costs.get("flops", 0.0)),
+                               "bytes accessed": float(
+                                   xla_costs.get("bytes accessed", 0.0))},
+        )
+    except Exception as e:  # noqa: BLE001 — a failed cell is a data point
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    _emit(rec, out_dir, verbose)
+    return rec
+
+
+def _emit(rec, out_dir, verbose):
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(
+            out_dir, f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    if verbose:
+        if rec["status"] == "ok":
+            m = rec["memory"]
+            r = rec["roofline"]
+            print(f"[OK] {rec['arch']} {rec['shape']} {rec['mesh']} "
+                  f"compile={rec['compile_s']}s "
+                  f"live={m['peak_live_bytes']/2**30:.2f}GiB "
+                  f"fits={m['fits_hbm']} "
+                  f"terms(c/m/x)={r['compute_s']:.3e}/{r['memory_s']:.3e}/"
+                  f"{r['collective_s']:.3e}s dom={r['dominant']}",
+                  flush=True)
+        elif rec["status"] == "skipped":
+            print(f"[SKIP] {rec['arch']} {rec['shape']} {rec['mesh']}: "
+                  f"{rec['reason']}", flush=True)
+        else:
+            print(f"[ERR] {rec['arch']} {rec['shape']} {rec['mesh']}: "
+                  f"{rec['error']}", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--fsdp", default=None,
+                    type=lambda s: s.lower() == "true")
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--no-seq-shard-cache", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    policy = dict(fsdp=args.fsdp, grad_compress=args.grad_compress,
+                  microbatches=args.microbatches,
+                  seq_shard_cache=not args.no_seq_shard_cache)
+    kw = dict(save_hlo=args.save_hlo)
+    policy.update(kw) if False else None
+    if args.all:
+        n_ok = n_err = 0
+        for mesh_kind in ("single", "multi"):
+            for arch in configs.ARCH_IDS:
+                for shape in SHAPES:
+                    rec = run_cell(arch, shape, mesh_kind, args.out,
+                                   save_hlo=args.save_hlo, **policy)
+                    n_ok += rec["status"] in ("ok", "skipped")
+                    n_err += rec["status"] == "error"
+        print(f"dry-run done: {n_ok} ok/skip, {n_err} errors")
+        raise SystemExit(1 if n_err else 0)
+    assert args.arch and args.shape
+    rec = run_cell(args.arch, args.shape, args.mesh, args.out,
+                   save_hlo=args.save_hlo, **policy)
+    raise SystemExit(0 if rec["status"] in ("ok", "skipped") else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state. The dry-run launcher sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; real TPU launches get the same topology from the runtime.
+
+  single pod : (data=16, model=16)        = 256 chips  (v5e pod)
+  multi-pod  : (pod=2, data=16, model=16) = 512 chips  (DCN over 'pod')
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "run under launch/dryrun.py (placeholder devices) or a real "
+            "fleet")
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(dev, axes)
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
+    """Small mesh for tests (requires xla_force_host_platform_device_count
+    set in the TEST process, never globally)."""
+    n = int(np.prod(shape))
+    dev = np.asarray(jax.devices()[:n]).reshape(shape)
+    return Mesh(dev, axes)
+
+
+def data_axis_names(mesh: Mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def data_axis_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in data_axis_names(mesh)]))
+
+
+def model_axis_size(mesh: Mesh) -> int:
+    return int(mesh.shape.get("model", 1))

@@ -1,0 +1,133 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+   compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+   memory term     = HLO_bytes / (chips x HBM_bw)
+   collective term = collective_bytes / (chips x link_bw)
+
+`cost_analysis()` supplies FLOPs / bytes; collective bytes are parsed from
+the post-SPMD-partitioning HLO text (per-device shapes), weighting each op
+by its on-wire factor (ring all-reduce moves ~2x its operand bytes).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+(constants from the assignment).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+HBM_PER_CHIP = 16 * 1024 ** 3          # v5e: 16 GiB
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,          # ring: reduce-scatter + all-gather
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]*)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device on-wire bytes by collective type (weighted) + raw sizes."""
+    out = {k: 0 for k in _COLLECTIVES}
+    raw = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        result_shapes, op = m.group(1), m.group(2)
+        if op.endswith("-done"):
+            continue
+        b = _shape_bytes(result_shapes)
+        raw[op] += b
+        out[op] += int(b * _COLLECTIVES[op])
+        counts[op] += 1
+    return {"weighted": out, "raw": raw, "counts": counts,
+            "total_weighted": sum(out.values()),
+            "total_raw": sum(raw.values())}
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float               # per-device HLO flops
+    hbm_bytes: float           # per-device HLO bytes accessed
+    coll_bytes: float          # per-device on-wire collective bytes
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    dominant: str = ""
+
+    @classmethod
+    def from_costs(cls, flops, hbm_bytes, coll_bytes,
+                   links: int = 4) -> "Roofline":
+        r = cls(flops=flops, hbm_bytes=hbm_bytes, coll_bytes=coll_bytes)
+        r.compute_s = flops / PEAK_FLOPS
+        r.memory_s = hbm_bytes / HBM_BW
+        r.collective_s = coll_bytes / (ICI_BW * links)
+        terms = {"compute": r.compute_s, "memory": r.memory_s,
+                 "collective": r.collective_s}
+        r.dominant = max(terms, key=terms.get)
+        return r
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE) for training;
+    2 N D for a forward-only pass (prefill), 2 N per token for decode."""
+    hd = cfg.hd
+    n_mats = 3 if cfg.mlp_gated else 2
+    if cfg.family == "moe":
+        per_layer = (cfg.top_k * 3 * cfg.d_model * cfg.d_ff
+                     + cfg.d_model * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+                     + cfg.n_heads * hd * cfg.d_model)
+    elif cfg.family in ("ssm", "hybrid"):
+        per_layer = (cfg.d_model * (2 * cfg.d_inner + 2 * cfg.ssm_state
+                                    + cfg.ssm_heads)
+                     + cfg.d_inner * cfg.d_model)
+        if cfg.family == "hybrid" and cfg.attn_every:
+            attn = (2 * cfg.d_model * cfg.d_model
+                    + cfg.d_model * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+                    + cfg.n_heads * hd * cfg.d_model
+                    + n_mats * cfg.d_model * cfg.d_ff)
+            per_layer += attn / cfg.attn_every
+    else:
+        per_layer = (cfg.d_model * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+                     + cfg.n_heads * hd * cfg.d_model
+                     + n_mats * cfg.d_model * cfg.d_ff)
+    n_layers = cfg.n_layers
+    if cfg.family == "encdec":
+        n_layers = (cfg.n_enc_layers or cfg.n_layers) + \
+            (cfg.n_dec_layers or cfg.n_layers)
+    n_active = per_layer * n_layers + 2 * cfg.vocab * cfg.d_model
+    tokens = shape.global_batch * (1 if kind == "decode" else shape.seq_len)
+    mult = 6 if kind == "train" else 2
+    return mult * n_active * tokens

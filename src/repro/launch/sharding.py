@@ -1,0 +1,203 @@
+"""Parameter / optimizer / batch / cache PartitionSpecs (DESIGN.md §5).
+
+Policy knobs:
+  fsdp  — additionally shard each weight's non-TP dim over the data axis
+          (needed when bf16 params alone exceed TP-sharded HBM: 405B, 34B,
+          30B-MoE);
+  zero1 — shard optimizer state dim-0 over the data axis when the param
+          itself is not FSDP-sharded (ZeRO-1).
+
+All rules are divisibility-guarded: a dim that doesn't divide the mesh axis
+stays replicated rather than failing to lower.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import data_axis_names, data_axis_size, \
+    model_axis_size
+from repro.models.config import ArchConfig
+
+FSDP_PARAM_THRESHOLD = 10e9
+
+
+def should_fsdp(cfg: ArchConfig) -> bool:
+    # cheap analytic estimate of param count
+    hd = cfg.hd
+    n_mats = 3 if cfg.mlp_gated else 2
+    if cfg.family == "moe":
+        per = cfg.n_experts * 3 * cfg.d_model * cfg.d_ff
+        per += 2 * cfg.d_model * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+    elif cfg.family in ("ssm", "hybrid"):
+        per = cfg.d_model * (2 * cfg.d_inner + 2 * cfg.ssm_state
+                             + cfg.ssm_heads) + cfg.d_inner * cfg.d_model
+    else:
+        per = (cfg.d_model * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+               + cfg.n_heads * hd * cfg.d_model
+               + n_mats * cfg.d_model * cfg.d_ff)
+    total = per * cfg.n_layers + 2 * cfg.vocab * cfg.d_model
+    return total > FSDP_PARAM_THRESHOLD
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 1 and n % size == 0
+
+
+class ShardingRules:
+    def __init__(self, cfg: ArchConfig, mesh: Mesh, *, fsdp=None,
+                 zero1=True, seq_shard_cache=True, dp_only=False):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.dp_only = dp_only
+        self.fsdp = (should_fsdp(cfg) if fsdp is None else fsdp) \
+            and not dp_only
+        self.zero1 = zero1
+        self.seq_shard_cache = seq_shard_cache
+        self.dsize = data_axis_size(mesh)
+        self.msize = 1 if dp_only else model_axis_size(mesh)
+        self.dax = data_axis_names(mesh)
+        self.data = (self.dax if len(self.dax) > 1
+                     else (self.dax[0] if self.dax else None))
+
+    # ----- parameters ------------------------------------------------------
+    def _f(self, dim: int):
+        """FSDP axis for a weight dim (or None)."""
+        if self.fsdp and _div(dim, self.dsize):
+            return "data"
+        return None
+
+    def _m(self, dim: int):
+        return "model" if _div(dim, self.msize) else None
+
+    def param_spec(self, path, leaf) -> P:
+        names = [getattr(p, "key", None) for p in path]
+        names = [n for n in names if n is not None]
+        shape = leaf.shape
+        stacked = any(n in ("layers", "enc_layers", "dec_layers")
+                      for n in names)
+        core = shape[1:] if stacked else shape
+        name = names[-1] if names else ""
+        in_ssm = "ssm" in names
+
+        spec: tuple = tuple(None for _ in core)
+        if name == "tok":
+            spec = (self._m(core[0]), self._f(core[1]))
+        elif name == "head":
+            spec = (self._f(core[0]), self._m(core[1]))
+        elif name in ("wq", "wk", "wv"):
+            spec = (self._f(core[0]), self._m(core[1]))
+        elif name in ("wi", "wg"):
+            if len(core) == 3:   # moe (E, d, ff)
+                if self._m(core[0]):
+                    spec = ("model", self._f(core[1]), None)
+                else:            # E % model axis != 0: FSDP over data,
+                    spec = (None, self._f(core[1]), None)  # capacity-EP
+            else:
+                spec = (self._f(core[0]), self._m(core[1]))
+        elif name == "wo":
+            if len(core) == 3:   # moe (E, ff, d)
+                if self._m(core[0]):
+                    spec = ("model", self._f(core[1]), None)
+                else:
+                    spec = (None, self._f(core[1]), None)
+            else:
+                spec = (self._m(core[0]), self._f(core[1]))
+        elif name == "router":
+            spec = (None, None)
+        elif name == "in_proj" and in_ssm:
+            spec = (self._f(core[0]), self._m(core[1]))
+        elif name == "in_proj":   # hybrid shared-attn input concat proj
+            spec = (self._f(core[0]), None)
+        elif name == "out_proj":
+            spec = (self._m(core[0]), self._f(core[1]))
+        elif name == "conv_w":
+            spec = (None, self._m(core[1]))
+        elif name in ("conv_b", "norm"):
+            spec = (self._m(core[0]),)
+        elif name in ("A_log", "D", "dt_bias", "scale"):
+            spec = tuple(None for _ in core)
+        if stacked:
+            spec = (None,) + spec
+        return P(*spec)
+
+    def params_pspecs(self, params_shape):
+        return jax.tree_util.tree_map_with_path(self.param_spec,
+                                                params_shape)
+
+    # ----- optimizer state --------------------------------------------------
+    def opt_spec(self, pspec: P, shape) -> P:
+        """ZeRO-1: add data-axis sharding on dim 0 when free & divisible."""
+        spec = list(pspec) + [None] * (len(shape) - len(pspec))
+        if self.zero1 and not self.fsdp and spec and spec[0] is None \
+                and _div(shape[0], self.dsize):
+            spec[0] = "data"
+        return P(*spec)
+
+    # ----- batch / cache ----------------------------------------------------
+    def batch_axis(self, global_batch: int):
+        # dp_only: fold the model axis into data parallelism too
+        candidates = []
+        if self.dp_only:
+            candidates.append(self.dax + ("model",))
+        candidates.append(self.dax)
+        if len(self.dax) > 1:
+            candidates.append(self.dax[-1:])
+        for axes in candidates:
+            size = 1
+            for a in axes:
+                size *= int(self.mesh.shape[a])
+            if _div(global_batch, size):
+                return axes if len(axes) > 1 else axes[0]
+        # batch too small for any DP split (e.g. long_500k batch=1)
+        return None
+
+    def batch_spec(self, batch_shape) -> dict:
+        out = {}
+        for k, v in batch_shape.items():
+            b = self.batch_axis(v.shape[0])
+            out[k] = P(*((b,) + (None,) * (len(v.shape) - 1)))
+        return out
+
+    def cache_spec(self, path, leaf) -> P:
+        """Decode caches. KV: (L, B, S, Hk, hd) — prefer head sharding if
+        Hk divides the model axis, else shard S (softmax collectives are
+        cheaper than replicating a 32k cache)."""
+        names = [getattr(p, "key", None) for p in path]
+        names = [n for n in names if n is not None]
+        shape = leaf.shape
+        name = names[-1] if names else ""
+        b = None
+        if name in ("k", "v") and len(shape) == 5:
+            L, B, S, Hk, hd = shape
+            b = self.batch_axis(B)
+            if _div(Hk, self.msize):
+                return P(None, b, None, "model", None)
+            if self.seq_shard_cache and _div(S, self.msize):
+                return P(None, b, "model", None, None)
+            return P(None, b, None, None, None)
+        if name == "conv" and len(shape) == 4:    # (L, B, wc-1, ch)
+            return P(None, self.batch_axis(shape[1]), None,
+                     self._m(shape[3]))
+        if name == "state" and len(shape) == 5:   # (L, B, H, P, N)
+            return P(None, self.batch_axis(shape[1]),
+                     self._m(shape[2]), None, None)
+        if name == "memory" and len(shape) == 3:  # (B, ml, d)
+            return P(self.batch_axis(shape[0]), None, None)
+        if name == "x0":
+            return P(self.batch_axis(shape[0]), None, None)
+        b = self.batch_axis(shape[1]) if len(shape) > 1 else None
+        return P(*((None, b) + (None,) * (len(shape) - 2)))
+
+    def cache_pspecs(self, cache_shape):
+        return jax.tree_util.tree_map_with_path(self.cache_spec,
+                                                cache_shape)
+
+    # ----- helpers ----------------------------------------------------------
+    def named(self, pspec_tree):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            pspec_tree,
+                            is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,239 @@
+"""Build (step function, abstract sharded inputs) for every
+(architecture x shape x mesh) cell — shared by dryrun.py and the drivers.
+
+Everything here is allocation-free: parameters, optimizer state and caches
+are `jax.eval_shape` ShapeDtypeStructs with NamedShardings attached.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.launch.mesh import data_axis_size
+from repro.launch.sharding import ShardingRules
+from repro.models import api
+from repro.models.config import SHAPES, ArchConfig, ShapeConfig
+from repro.models.encdec import DEC_PREFILL_LEN
+from repro.models.sharding import logical_rules, rules_for_mesh
+from repro.optim import make_optimizer
+from repro.train.trainer import TrainConfig, make_train_step
+
+# Per-arch training knobs (optimizer, microbatch budget). Microbatch count
+# is clamped so each microbatch still fills the data axis.
+TRAIN_KNOBS = {
+    "llama3-405b": dict(optimizer="adafactor", microbatches=16,
+                        seq_parallel=True, acc_dtype="bfloat16",
+                        opt_kwargs=dict(master=False)),
+    "granite-34b": dict(optimizer="adafactor", microbatches=8,
+                        seq_parallel=True),
+    "qwen3-moe-30b-a3b": dict(optimizer="adafactor", microbatches=8,
+                              seq_parallel=True),
+    "yi-9b": dict(optimizer="adamw", microbatches=4, fsdp=True),
+    "zamba2-7b": dict(optimizer="adamw", microbatches=4, fsdp=True),
+    "granite-moe-3b-a800m": dict(optimizer="adamw", microbatches=4,
+                                 fsdp=True),
+    "seamless-m4t-large-v2": dict(optimizer="adamw", microbatches=4),
+    "internvl2-1b": dict(optimizer="adamw", microbatches=2),
+    "mamba2-130m": dict(optimizer="adamw", microbatches=1),
+    "smollm-135m": dict(optimizer="adamw", microbatches=1),
+}
+
+# Tiny archs: pure DP — a 16-way TP axis would idle on 9-head / 1536-ff
+# dims and replicate attention score memory (DESIGN.md §5).
+DP_ONLY_ARCHS = {"smollm-135m", "mamba2-130m"}
+
+# Cells skipped by assignment policy (DESIGN.md §6).
+FULL_ATTENTION_ARCHS = {
+    "smollm-135m", "yi-9b", "llama3-405b", "granite-34b", "internvl2-1b",
+    "qwen3-moe-30b-a3b", "granite-moe-3b-a800m", "seamless-m4t-large-v2",
+}
+
+
+def cell_is_skipped(arch: str, shape: str) -> str | None:
+    if shape == "long_500k" and arch in FULL_ATTENTION_ARCHS:
+        return ("long_500k needs sub-quadratic attention; "
+                f"{arch} is pure full-attention (skip per assignment)")
+    return None
+
+
+def _sds(tree, shardings):
+    return jax.tree.map(
+        lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
+        tree, shardings)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeConfig
+    cfg: ArchConfig
+    fn: object                 # callable to jit
+    args: tuple                # abstract sharded args
+    donate: tuple              # donated arg indices
+    rules: ShardingRules
+    kind: str
+
+    logical: dict | None = None
+
+    def lower(self, mesh):
+        jitted = jax.jit(self.fn, donate_argnums=self.donate)
+        rules = self.logical or rules_for_mesh(mesh.axis_names)
+        with mesh, logical_rules(rules):
+            return jitted.lower(*self.args)
+
+
+def _microbatches(arch, global_batch, dsize):
+    want = TRAIN_KNOBS[arch]["microbatches"]
+    n = min(want, max(1, global_batch // dsize))
+    while global_batch % n or (global_batch // n) % dsize:
+        n -= 1
+    return max(n, 1)
+
+
+def abstract_params(cfg: ArchConfig, rules: ShardingRules):
+    shapes = jax.eval_shape(
+        functools.partial(api.init_params, cfg), jax.random.PRNGKey(0))
+    pspecs = rules.params_pspecs(shapes)
+    return _sds(shapes, rules.named(pspecs)), pspecs
+
+
+def batch_struct(cfg: ArchConfig, shape: ShapeConfig, kind: str):
+    """Abstract input batch per shape kind (the input_specs() contract)."""
+    B, S = shape.global_batch, shape.seq_len
+    if kind == "train":
+        b = {"inputs": jax.ShapeDtypeStruct((B, S), jnp.int32),
+             "targets": jax.ShapeDtypeStruct((B, S), jnp.int32),
+             "mask": jax.ShapeDtypeStruct((B, S), jnp.float32)}
+        if cfg.family == "vlm":
+            b["frontend"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_frontend_tokens, cfg.d_model), jnp.float32)
+        elif cfg.family == "encdec":
+            b["frontend"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                 jnp.float32)
+        return b
+    if kind == "prefill":
+        if cfg.family == "encdec":
+            # long input is the AUDIO side; decoder prefills a short prefix
+            return {"inputs": jax.ShapeDtypeStruct((B, DEC_PREFILL_LEN),
+                                                   jnp.int32),
+                    "frontend": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                     jnp.float32)}
+        b = {"inputs": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            b["frontend"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_frontend_tokens, cfg.d_model), jnp.float32)
+        return b
+    raise ValueError(kind)
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, fsdp=None, zero1=True,
+               grad_compress=False, seq_shard_cache=True,
+               microbatches=None, dp_only=None, seq_axis=None) -> Cell:
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    if dp_only is None:
+        # tiny archs: pure DP for train/prefill; decode keeps TP so the
+        # 32k KV cache can be seq-sharded over the model axis
+        dp_only = arch in DP_ONLY_ARCHS and shape.kind != "decode"
+    if fsdp is None:
+        fsdp = TRAIN_KNOBS[arch].get("fsdp")
+    rules = ShardingRules(cfg, mesh, fsdp=fsdp, zero1=zero1,
+                          seq_shard_cache=seq_shard_cache, dp_only=dp_only)
+    if seq_axis is None and shape.kind != "decode" \
+            and TRAIN_KNOBS[arch].get("seq_parallel"):
+        seq_axis = "model"
+    logical = rules_for_mesh(
+        mesh.axis_names, dp_only=dp_only,
+        batch_axes=rules.batch_axis(shape.global_batch),
+        seq_axis=seq_axis)
+    if cfg.family == "moe" and not dp_only:
+        from repro.launch.mesh import model_axis_size
+        if cfg.n_experts % model_axis_size(mesh) != 0:
+            # E doesn't divide the model axis: shard dispatch capacity
+            # instead of experts (granite-moe: E=40 on a 16-way axis)
+            logical["experts"] = None
+            logical["moe_capacity"] = "model"
+    dsize = data_axis_size(mesh)
+    params_sds, params_pspecs = abstract_params(cfg, rules)
+
+    if shape.kind == "train":
+        knobs = TRAIN_KNOBS[arch]
+        n_mb = microbatches or _microbatches(arch, shape.global_batch,
+                                             dsize)
+        opt = make_optimizer(knobs["optimizer"], lr=1e-4,
+                             **knobs.get("opt_kwargs", {}))
+        tcfg = TrainConfig(optimizer=knobs["optimizer"],
+                           microbatches=n_mb, grad_compress=grad_compress,
+                           acc_dtype=knobs.get("acc_dtype", "float32"))
+        opt_shapes = jax.eval_shape(opt.init, params_sds)
+        opt_pspecs = jax.tree_util.tree_map_with_path(
+            lambda path, leaf: rules.opt_spec(
+                rules.param_spec(path[1:], leaf)
+                if path and getattr(path[0], "key", "") in ("master", "m",
+                                                            "v")
+                else P(), leaf.shape),
+            opt_shapes)
+        opt_sds = _sds(opt_shapes, rules.named(opt_pspecs))
+        batch = batch_struct(cfg, shape, "train")
+        bspecs = rules.batch_spec(batch)
+        batch_sds = {k: jax.ShapeDtypeStruct(
+            v.shape, v.dtype,
+            sharding=NamedSharding(mesh, bspecs[k]))
+            for k, v in batch.items()}
+        step = make_train_step(cfg, tcfg, opt)
+
+        if grad_compress:
+            fn = step
+            err_shapes = jax.eval_shape(
+                lambda p: jax.tree.map(
+                    lambda x: jnp.zeros(x.shape, jnp.float32), p),
+                params_sds)
+            err_sds = _sds(err_shapes, rules.named(params_pspecs))
+            args = (params_sds, opt_sds, err_sds, batch_sds)
+            donate = (0, 1, 2)
+        else:
+            def fn(params, opt_state, batch):  # noqa
+                return step(params, opt_state, {}, batch)
+            args = (params_sds, opt_sds, batch_sds)
+            donate = (0, 1)
+        return Cell(arch, shape, cfg, fn, args, donate, rules, "train",
+                    logical=logical)
+
+    if shape.kind == "prefill":
+        batch = batch_struct(cfg, shape, "prefill")
+        bspecs = rules.batch_spec(batch)
+        batch_sds = {k: jax.ShapeDtypeStruct(
+            v.shape, v.dtype, sharding=NamedSharding(mesh, bspecs[k]))
+            for k, v in batch.items()}
+
+        def fn(params, batch):  # noqa
+            return api.prefill(params, cfg, batch)
+        return Cell(arch, shape, cfg, fn, (params_sds, batch_sds), (),
+                    rules, "prefill", logical=logical)
+
+    # ---- decode ------------------------------------------------------------
+    B, S = shape.global_batch, shape.seq_len
+    cache_shapes = jax.eval_shape(
+        functools.partial(api.make_decode_cache, cfg, B, S))
+    cache_pspecs = rules.cache_pspecs(cache_shapes)
+    cache_sds = _sds(cache_shapes, rules.named(cache_pspecs))
+    tok_sds = jax.ShapeDtypeStruct(
+        (B, 1), jnp.int32,
+        sharding=NamedSharding(mesh, P(rules.batch_axis(B), None)))
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32,
+                                   sharding=NamedSharding(mesh, P()))
+
+    def fn(params, cache, token, pos):  # noqa
+        return api.decode_step(params, cfg, cache, token, pos)
+
+    return Cell(arch, shape, cfg, fn,
+                (params_sds, cache_sds, tok_sds, pos_sds), (1,), rules,
+                "decode", logical=logical)

@@ -1,0 +1,66 @@
+"""Training launcher.
+
+Two modes:
+  * real execution on the available devices (reduced/smoke configs on CPU;
+    the same code path drives TPU slices, where jax.distributed supplies
+    the device set):
+      PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+          --smoke --steps 20 --ckpt-dir /tmp/ckpt
+  * production-mesh LOWERING of the exact assigned cell (no execution —
+    this container has one CPU device); use launch/dryrun.py for the full
+    analysis matrix.
+
+Fault tolerance: --restore resumes from the newest valid checkpoint;
+crashes mid-run are recoverable the same way (see examples/train_lm.py
+for an injected-failure demo).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro import configs
+from repro.data.pipeline import PipelineConfig, SyntheticTokens
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "adafactor"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--restore", action="store_true")
+    args = ap.parse_args()
+
+    cfg = (configs.get_smoke(args.arch) if args.smoke
+           else configs.get(args.arch))
+    pipe = SyntheticTokens(PipelineConfig(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch,
+        seed=0, frontend_tokens=(cfg.n_frontend_tokens
+                                 if cfg.family in ("vlm", "encdec") else 0),
+        d_model=cfg.d_model))
+    tcfg = TrainConfig(optimizer=args.optimizer, lr=args.lr,
+                       microbatches=args.microbatches,
+                       grad_compress=args.grad_compress,
+                       ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir)
+    trainer = Trainer(cfg, tcfg, pipe)
+    if args.restore and trainer.try_restore():
+        print(f"restored from step {trainer.step}")
+    hist = trainer.run(args.steps, log_every=max(1, args.steps // 5))
+    print(f"done: {trainer.step} steps, final loss {hist[-1]:.4f}")
+    if trainer.straggler_steps:
+        print(f"straggler steps: {trainer.straggler_steps}")
+
+
+if __name__ == "__main__":
+    main()

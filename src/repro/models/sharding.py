@@ -1,0 +1,85 @@
+"""Logical-axis activation sharding (DIY flax-style logical rules).
+
+Model code annotates activations with logical names via `shard(x, ...)`;
+the launcher installs a mapping logical-name -> mesh axes before tracing.
+Outside a mesh context the annotations are identity, so smoke tests on one
+CPU device run the exact same model code.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_rules() -> dict | None:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def logical_rules(rules: dict):
+    """rules: logical axis name -> mesh axis (str, tuple of str, or None)."""
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def shard(x, *names):
+    """Annotate ``x`` with logical axis ``names`` (one per dim; None = any).
+
+    No-op unless inside `logical_rules` (installed by the launcher) and an
+    active mesh context.
+    """
+    rules = current_rules()
+    if rules is None:
+        return x
+    axes = [rules.get(n) if n is not None else None for n in names]
+    # de-duplicate mesh axes: a later dim wins (sequence-parallel runs map
+    # both "seq" and "heads"/"ff"/"vocab" to the model axis; inside the
+    # sharded-compute section the compute dim keeps it, Megatron-style)
+    seen = set()
+    for i in range(len(axes) - 1, -1, -1):
+        flat = axes[i] if isinstance(axes[i], tuple) else (axes[i],)
+        if any(a in seen for a in flat if a):
+            axes[i] = None
+        seen.update(a for a in flat if a)
+    return jax.lax.with_sharding_constraint(x, P(*axes))
+
+
+# Canonical rule sets -------------------------------------------------------
+
+def rules_for_mesh(axis_names: tuple, *, dp_only: bool = False,
+                   batch_axes=None, seq_axis=None) -> dict:
+    """Standard DP/TP/SP/EP mapping for ('data','model') or
+    ('pod','data','model') meshes (DESIGN.md §5).
+
+    dp_only: pure data parallelism (tiny models — TP would idle on
+    sub-16-way head/ff dims); batch_axes/seq_axis override the defaults
+    (per-cell batch divisibility, sequence-parallel perf runs)."""
+    data_axes = tuple(a for a in axis_names if a in ("pod", "data"))
+    data = data_axes if len(data_axes) > 1 else (data_axes[0]
+                                                 if data_axes else None)
+    tp = None if dp_only else "model"
+    return {
+        "batch": data if batch_axes is None else batch_axes,
+        "seq": seq_axis,      # "model" for sequence-parallel runs
+        "d_model": None,
+        "heads": tp,
+        "kv_heads": tp,
+        "ff": tp,
+        "vocab": tp,
+        "experts": tp,
+        "moe_capacity": None,   # launcher flips to "model" when E doesn't
+                                # divide the model axis (see launch/steps)
+        "ssm_heads": tp,
+        "capacity": None,
+        "state": None,
+    }

@@ -1,0 +1,186 @@
+"""Mamba2 block — SSD (state-space duality) chunked algorithm
+[arXiv:2405.21060], plus the single-token recurrence for decoding.
+
+Chunked scan: intra-chunk outputs use the quadratic "attention-like" dual
+form; inter-chunk state is a (cheap) linear recurrence over chunk summaries
+via `lax.scan`. State per head: (headdim x d_state); G=1 B/C groups.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig
+from repro.models.layers import _dense_init, matmul, rmsnorm
+from repro.models.sharding import shard
+
+
+def ssm_init(cfg: ArchConfig, rng):
+    d, din = cfg.d_model, cfg.d_inner
+    N, H = cfg.ssm_state, cfg.ssm_heads
+    wc = cfg.conv_width
+    conv_ch = din + 2 * N   # x, B, C go through the depthwise conv
+    ks = jax.random.split(rng, 5)
+    dt = cfg.param_dtype
+    return {
+        "in_proj": _dense_init(ks[0], (d, 2 * din + 2 * N + H), dt),
+        "conv_w": (jax.random.normal(ks[1], (wc, conv_ch),
+                                     dtype=jnp.float32) / wc).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dtype=dt),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), dtype=jnp.float32),
+        "dt_bias": jnp.zeros((H,), dtype=jnp.float32),
+        "norm": jnp.ones((din,), dtype=dt),
+        "out_proj": _dense_init(ks[4], (din, d), dt),
+    }
+
+
+def _segsum(a):
+    """a: (..., T). out[..., i, j] = sum_{k=j+1..i} a_k (i >= j), else -inf."""
+    T = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(T)[:, None]
+    j = jnp.arange(T)[None, :]
+    return jnp.where(i >= j, seg, -jnp.inf)
+
+
+def _ssd_chunked(x, a, Bm, Cm, chunk):
+    """x: (b,s,h,p) f32; a: (b,s,h) f32 (negative decays);
+    Bm, Cm: (b,s,n) f32 (G=1, broadcast over heads). Returns (b,s,h,p)."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    ac = a.reshape(b, nc, chunk, h).transpose(0, 3, 1, 2)   # (b,h,nc,T)
+    Bc = Bm.reshape(b, nc, chunk, n)
+    Cc = Cm.reshape(b, nc, chunk, n)
+
+    a_cum = jnp.cumsum(ac, axis=-1)                          # (b,h,nc,T)
+    L = jnp.exp(_segsum(ac))                                 # (b,h,nc,T,T)
+
+    # 1. intra-chunk (diagonal blocks)
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", Cc, Bc, L, xc)
+
+    # 2. chunk summaries (state contribution of each chunk)
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)          # (b,h,nc,T)
+    states = jnp.einsum("bcsn,bhcs,bcshp->bchpn", Bc, decay_states, xc)
+
+    # 3. inter-chunk recurrence  S_{c} = S_{c-1} * exp(sum a_c) + states_c
+    chunk_decay = jnp.exp(a_cum[..., -1])                    # (b,h,nc)
+
+    def scan_fn(carry, inp):
+        st, dec = inp                                        # (b,h,p,n),(b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                    # emit PREVIOUS
+
+    init = jnp.zeros((b, h, p, n), dtype=x.dtype)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4),                    # (nc,b,h,p,n)
+         chunk_decay.transpose(2, 0, 1)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # (b,nc,h,p,n)
+
+    # 4. off-diagonal (previous chunks -> this chunk's outputs)
+    state_decay = jnp.exp(a_cum)                             # (b,h,nc,T)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cc, prev_states,
+                       state_decay)
+    return (y_diag + y_off).reshape(b, s, h, p), final_state
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt):
+    din, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :din]
+    xBC = zxbcdt[..., din:din + din + 2 * N]
+    dt = zxbcdt[..., -H:]
+    return z, xBC, dt
+
+
+def ssm_block(p, cfg: ArchConfig, u, *, cache=None, return_cache=False):
+    """u: (B, S, d). cache (decode): dict(conv (B, wc-1, ch), state
+    (B, H, P, N), none for training/prefill). Returns (out, new_cache).
+    return_cache=True (prefill): emit the end-of-sequence (conv, state)
+    cache for subsequent decoding."""
+    B, S, d = u.shape
+    din, N, H, P = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                    cfg.ssm_headdim)
+    wc = cfg.conv_width
+    zxbcdt = matmul(u, p["in_proj"])
+    z, xBC, dtr = _split_proj(cfg, zxbcdt)
+    z = shard(z, "batch", "seq", "ff")
+    xBC = shard(xBC, "batch", "seq", None)
+
+    A = -jnp.exp(p["A_log"])                                 # (H,)
+    dt_f = jax.nn.softplus(dtr.astype(jnp.float32)
+                           + p["dt_bias"])                   # (B,S,H)
+
+    if cache is None:
+        # causal depthwise conv over (x,B,C) channels
+        pad = jnp.zeros((B, wc - 1, xBC.shape[-1]), dtype=xBC.dtype)
+        xp = jnp.concatenate([pad, xBC], axis=1)
+        conv = sum(xp[:, k:k + S, :].astype(jnp.float32)
+                   * p["conv_w"][k].astype(jnp.float32)
+                   for k in range(wc)) + p["conv_b"].astype(jnp.float32)
+        xBC_c = jax.nn.silu(conv)
+        xs = shard(xBC_c[..., :din].reshape(B, S, H, P),
+                   "batch", "seq", "ssm_heads", None)
+        Bm = xBC_c[..., din:din + N]
+        Cm = xBC_c[..., din + N:]
+        a = shard(dt_f * A, "batch", "seq", "ssm_heads")     # (B,S,H)
+        xdt = xs * dt_f[..., None]
+        chunk = min(cfg.ssm_chunk, S)
+        pad_s = (-S) % chunk
+        if pad_s:
+            # pad with x=0 (no contribution) and a=0 (decay 1, state kept)
+            xdt = jnp.pad(xdt, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+            a = jnp.pad(a, ((0, 0), (0, pad_s), (0, 0)))
+            Bm_p = jnp.pad(Bm, ((0, 0), (0, pad_s), (0, 0)))
+            Cm_p = jnp.pad(Cm, ((0, 0), (0, pad_s), (0, 0)))
+        else:
+            Bm_p, Cm_p = Bm, Cm
+        y, final_state = _ssd_chunked(xdt, a, Bm_p, Cm_p, chunk)
+        y = y[:, :S]
+        y = y + p["D"][None, None, :, None] * xs
+        new_cache = None
+        if return_cache:
+            tail = xp[:, S:S + wc - 1, :]     # last wc-1 raw conv inputs
+            new_cache = {"conv": tail.astype(u.dtype),
+                         "state": final_state.astype(jnp.float32)}
+    else:
+        # single-token recurrence (S == 1)
+        conv_st = cache["conv"]                              # (B, wc-1, ch)
+        window = jnp.concatenate([conv_st, xBC], axis=1)     # (B, wc, ch)
+        conv = (window.astype(jnp.float32)
+                * p["conv_w"].astype(jnp.float32)[None]).sum(axis=1) \
+            + p["conv_b"].astype(jnp.float32)
+        xBC_c = jax.nn.silu(conv)[:, None, :]                # (B,1,ch)
+        xs = xBC_c[..., :din].reshape(B, 1, H, P)
+        Bm = xBC_c[..., din:din + N]                         # (B,1,N)
+        Cm = xBC_c[..., din + N:]
+        a = jnp.exp(dt_f * A)                                # (B,1,H)
+        st = cache["state"]                                  # (B,H,P,N) f32
+        upd = jnp.einsum("bhp,bn->bhpn", (xs * dt_f[..., None])[:, 0],
+                         Bm[:, 0])
+        st = st * a[:, 0, :, None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", st, Cm[:, 0])[:, None]
+        y = y + p["D"][None, None, :, None] * xs
+        new_cache = {"conv": window[:, 1:, :], "state": st}
+
+    y = y.reshape(B, S, din).astype(u.dtype)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype)
+    y = rmsnorm({"scale": p["norm"]}, y, cfg.norm_eps)
+    out = matmul(y, p["out_proj"])
+    return shard(out, "batch", "seq", "d_model"), new_cache
+
+
+def ssm_cache_init(cfg: ArchConfig, batch, dtype=jnp.float32):
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch),
+                          dtype=cfg.param_dtype),
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_headdim,
+                            cfg.ssm_state), dtype=dtype),
+    }

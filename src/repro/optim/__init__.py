@@ -1,0 +1,11 @@
+from repro.optim.adafactor import adafactor
+from repro.optim.adamw import adamw
+from repro.optim.grad_compress import with_error_feedback
+
+
+def make_optimizer(name: str, lr: float = 3e-4, **kw):
+    if name == "adamw":
+        return adamw(lr, **kw)
+    if name == "adafactor":
+        return adafactor(lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

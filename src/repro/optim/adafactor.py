@@ -1,0 +1,86 @@
+"""Adafactor (factored second moment) — the memory-frugal optimizer used
+for the 405B config: O(n+m) state for an (n, m) matrix instead of O(nm),
+plus fp32 master weights (still the dominant term, FSDP-sharded).
+
+The second-moment state is kept as a flat list aligned with
+jax.tree.leaves(params) (unambiguous regardless of param dict key names).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import Optimizer
+
+
+def adafactor(lr: float, decay: float = 0.8, eps: float = 1e-30,
+              clip_rms: float = 1.0, weight_decay: float = 0.0,
+              master: bool = True) -> Optimizer:
+    """master=False drops the fp32 master copy (param updates applied in
+    the params' own dtype). Saves 4 bytes/param — the difference between
+    fitting and not fitting 405B training on a 16 GiB/chip v5e pod; the
+    small-update truncation cost is documented in EXPERIMENTS.md §Dry-run.
+    """
+    def _factored(shape):
+        return len(shape) >= 2
+
+    def init(params):
+        def state_for(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], dtype=jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    dtype=jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, dtype=jnp.float32)}
+
+        state = {
+            "step": jnp.zeros((), dtype=jnp.int32),
+            "v": [state_for(p) for p in jax.tree.leaves(params)],
+        }
+        if master:
+            state["master"] = jax.tree.map(
+                lambda p: jnp.array(p, dtype=jnp.float32, copy=True),
+                params)
+        return state
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+
+        def upd(g, v, master):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(g.shape):
+                vr = beta * v["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * g2.mean(axis=-2)
+                r = vr / jnp.maximum(
+                    vr.mean(axis=-1, keepdims=True), eps)
+                u = g / jnp.sqrt(
+                    jnp.maximum(r[..., None] * vc[..., None, :], eps))
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nv = {"v": beta * v["v"] + (1 - beta) * g2}
+                u = g / jnp.sqrt(jnp.maximum(nv["v"], eps))
+            # RMS update clipping
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_rms)
+            master = master - lr * (u + weight_decay * master)
+            return nv, master
+
+        treedef = jax.tree.structure(grads)
+        masters = (jax.tree.leaves(state["master"]) if master else
+                   [p.astype(jnp.float32) for p in jax.tree.leaves(params)])
+        out = [upd(g, v, w) for g, v, w in zip(
+            jax.tree.leaves(grads), state["v"], masters)]
+        new_w = jax.tree.unflatten(treedef, [o[1] for o in out])
+        new_params = jax.tree.map(lambda w, p: w.astype(p.dtype),
+                                  new_w, params)
+        new_state = {"step": step, "v": [o[0] for o in out]}
+        if master:
+            new_state["master"] = new_w
+        return new_params, new_state
+
+    return Optimizer(init=init, update=update)

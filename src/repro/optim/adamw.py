@@ -1,0 +1,70 @@
+"""AdamW with fp32 master weights over (possibly bf16) params.
+
+Interface (shared by all optimizers here):
+  init(params)                     -> state
+  update(grads, state, params)     -> (new_params, new_state)
+State and master weights are plain pytrees so the launcher can shard them
+(ZeRO-1: dim-0 sharding over the data axis, launch/sharding.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        return {
+            "step": jnp.zeros((), dtype=jnp.int32),
+            # copy=True: astype(f32) on f32 params is a no-op alias,
+            # which breaks buffer donation (donate-twice)
+            "master": jax.tree.map(
+                lambda p: jnp.array(p, dtype=jnp.float32, copy=True),
+                params),
+            "m": jax.tree.map(
+                lambda p: jnp.zeros(p.shape, dtype=jnp.float32), params),
+            "v": jax.tree.map(
+                lambda p: jnp.zeros(p.shape, dtype=jnp.float32), params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, master):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1.0 - b1) * g
+            v = b2 * v + (1.0 - b2) * g * g
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            master = master - lr * (u + weight_decay * master)
+            return m, v, master
+
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state["m"])
+        flat_v = jax.tree.leaves(state["v"])
+        flat_w = jax.tree.leaves(state["master"])
+        treedef = jax.tree.structure(grads)
+        out = [upd(g, m, v, w) for g, m, v, w
+               in zip(flat_g, flat_m, flat_v, flat_w)]
+        new_m = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_v = jax.tree.unflatten(treedef, [o[1] for o in out])
+        new_w = jax.tree.unflatten(treedef, [o[2] for o in out])
+        new_params = jax.tree.map(
+            lambda w, p: w.astype(p.dtype), new_w, params)
+        return new_params, {"step": step, "master": new_w, "m": new_m,
+                            "v": new_v}
+
+    return Optimizer(init=init, update=update)

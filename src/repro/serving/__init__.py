@@ -1,0 +1,1 @@
+# Serving: batched engine + dtANS-compressed sparse weights.

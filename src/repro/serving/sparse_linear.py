@@ -1,0 +1,91 @@
+"""SparseLinear: a dense projection replaced by a pruned, entropy-coded
+weight matrix decoded on the fly (the paper's LLM-inference motivation,
+Section I, made concrete).
+
+Pipeline: dense W (d_in, d_out) -> magnitude prune -> codebook-quantize
+surviving values (8-bit centroids make the value distribution low-entropy,
+which is what dtANS compresses; raw float32 mantissas would all escape) ->
+CSR-dtANS encode of W^T (so y = W^T-rows . x = SpMVM per output neuron).
+
+`apply` contracts a batch of activations against the decoded matrix; the
+decode runs through the same kernel machinery as `kernels/dtans_spmv`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.csr_dtans import CSRdtANS, encode_matrix
+from repro.kernels import ops
+from repro.kernels.pack import PackedMatrix, pack_matrix
+from repro.sparse.formats import CSR, best_baseline_nbytes
+from repro.sparse.prune import codebook_quantize, magnitude_prune
+
+
+@dataclasses.dataclass
+class SparseLinear:
+    mat: CSRdtANS            # encodes W^T: (d_out rows, d_in cols)
+    packed: PackedMatrix
+    d_in: int
+    d_out: int
+    dense_bytes: int
+    baseline_bytes: int      # best of CSR/COO/SELL on the pruned matrix
+
+    @classmethod
+    def from_dense(cls, w: np.ndarray, sparsity: float = 0.8,
+                   value_bits: int = 8, lane_width: int = 128,
+                   shared_table: bool = True) -> "SparseLinear":
+        d_in, d_out = w.shape
+        pruned = magnitude_prune(np.asarray(w, dtype=np.float32).T,
+                                 sparsity)
+        pruned = codebook_quantize(pruned, bits=value_bits)
+        mat = encode_matrix(pruned, lane_width=lane_width,
+                            shared_table=shared_table)
+        _, bb = best_baseline_nbytes(pruned)
+        return cls(mat=mat, packed=pack_matrix(mat), d_in=d_in,
+                   d_out=d_out, dense_bytes=w.size * w.dtype.itemsize,
+                   baseline_bytes=bb)
+
+    @property
+    def compressed_bytes(self) -> int:
+        return self.mat.nbytes
+
+    @property
+    def compression_vs_dense(self) -> float:
+        return self.dense_bytes / self.mat.nbytes
+
+    @property
+    def compression_vs_best_sparse(self) -> float:
+        return self.baseline_bytes / self.mat.nbytes
+
+    def apply(self, x, *, interpret: bool = True):
+        """x: (..., d_in) -> (..., d_out).
+
+        Batched contraction against the decoded sparse matrix: decode once
+        (cols, vals), gather x at cols, reduce — the SpMM generalization of
+        the paper's SpMVM kernel (one x per request in the batch).
+        """
+        lead = x.shape[:-1]
+        xb = jnp.asarray(x, dtype=jnp.float32).reshape(-1, self.d_in)
+        if xb.shape[0] == 1:
+            y = ops.spmv(self.packed, xb[0], interpret=interpret)[None]
+        else:
+            cols, vals = ops.decode(self.packed, interpret=interpret)
+            S, L, W = cols.shape
+            mask = cols >= 0
+            xg = jnp.take(xb, jnp.clip(cols, 0, self.d_in - 1),
+                          axis=1)                      # (B, S, L, W)
+            contrib = jnp.where(mask[None], xg * vals[None], 0.0)
+            y = contrib.sum(-1).reshape(xb.shape[0], S * L)[:, :self.d_out]
+        return y.reshape(*lead, self.d_out).astype(x.dtype)
+
+    def apply_dense_reference(self, x):
+        """Oracle: decode to dense and matmul (tests)."""
+        from repro.core.csr_dtans import decode_matrix
+        w = decode_matrix(self.mat).to_dense()   # (d_out, d_in)
+        return (jnp.asarray(x) @ jnp.asarray(w, dtype=jnp.float32).T
+                ).astype(x.dtype)

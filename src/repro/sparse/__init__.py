@@ -1,0 +1,2 @@
+# Sparse-matrix substrate: formats (COO/CSR/SELL), reference SpMVM,
+# random-graph generators, and magnitude pruning for NN weights.

@@ -1,0 +1,1 @@
+# Training substrate: trainer loop, checkpointing, elasticity.

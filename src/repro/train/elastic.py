@@ -1,0 +1,45 @@
+"""Elastic scaling & straggler mitigation.
+
+On a real fleet the control plane detects node failure / slow pods and the
+job must (a) continue with fewer data-parallel replicas or (b) absorb new
+ones. Because every piece of run state here is either replicated (step),
+deterministic-by-construction (data pipeline: batch = f(seed, step, shard))
+or a pytree with named shardings (params/optimizer), elasticity reduces to
+ONE operation: re-placing the state pytrees under a new mesh.
+
+`reshard(tree, new_mesh, pspecs)` is that operation (device_put with the
+new NamedShardings; XLA moves bytes). `shrink_data_axis` recomputes the
+per-shard batch split — the pipeline needs no migration because shards are
+stateless functions.
+
+Straggler mitigation layers (documented design, monitor implemented in
+trainer.py):
+  1. per-step deadline = straggler_factor x EMA(step time); slow steps are
+     recorded (Trainer.straggler_steps);
+  2. at scale, the recommended policy is pod-level: a pod that misses K
+     consecutive deadlines is ejected (shrink DP by one pod = this module's
+     reshard with pod axis reduced) and re-admitted after health checks;
+  3. checkpoint cadence bounds lost work to ckpt_every steps; the data
+     pipeline replays the exact token stream after restore.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+
+
+def reshard(tree, mesh, pspec_tree):
+    """Re-place a state pytree onto ``mesh`` with matching PartitionSpecs."""
+    return jax.tree.map(
+        lambda x, spec: jax.device_put(x, NamedSharding(mesh, spec)),
+        tree, pspec_tree)
+
+
+def shrink_data_axis(global_batch: int, old_shards: int,
+                     new_shards: int) -> int:
+    """Per-shard batch after an elastic resize; global batch is preserved
+    when divisible, otherwise rounded down to the nearest multiple."""
+    if global_batch % new_shards == 0:
+        return global_batch // new_shards
+    return max(1, global_batch // new_shards)

@@ -1,0 +1,153 @@
+"""Training loop with microbatched gradient accumulation, fault tolerance,
+and straggler monitoring.
+
+Scale features (DESIGN.md §5):
+  * gradient accumulation via `lax.scan` over microbatches — the per-chip
+    peak activation memory is O(microbatch), enabling the 405B train_4k cell;
+  * gradient compression (bf16 + error feedback) before the DP reduction;
+  * async checkpoint every `ckpt_every` steps + restore-from-latest restart;
+  * straggler monitor: per-step wall time EMA; steps slower than
+    `straggler_factor` x EMA are logged (on a real fleet this signal feeds
+    the pod-level replica-skip / hot-spare path, train/elastic.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.models.config import ArchConfig
+from repro.optim import make_optimizer
+from repro.optim.grad_compress import compress, init_error_state
+from repro.train.checkpoint import AsyncCheckpointer, restore_latest
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    optimizer: str = "adamw"
+    lr: float = 3e-4
+    microbatches: int = 1
+    acc_dtype: str = "float32"   # grad-accumulation dtype (bf16 halves
+                                 # the accumulator HBM for the 405B cell)
+    grad_compress: bool = False
+    ckpt_every: int = 50
+    ckpt_dir: str = ""
+    straggler_factor: float = 3.0
+
+
+def make_train_step(cfg: ArchConfig, tcfg: TrainConfig, opt):
+    """Returns train_step(params, opt_state, err, batch) ->
+    (params, opt_state, err, metrics). Batch leading dim is split into
+    ``tcfg.microbatches`` chunks scanned with gradient accumulation."""
+
+    def loss_of(params, mb):
+        return api.loss_fn(params, cfg, mb)
+
+    def train_step(params, opt_state, err, batch):
+        n = tcfg.microbatches
+
+        def split(x):
+            b = x.shape[0]
+            return x.reshape((n, b // n) + x.shape[1:])
+
+        mbs = jax.tree.map(split, batch)
+
+        acc_dt = jnp.dtype(tcfg.acc_dtype)
+
+        def acc_fn(carry, mb):
+            gsum, lsum = carry
+            (loss, _), g = jax.value_and_grad(loss_of, has_aux=True)(
+                params, mb)
+            gsum = jax.tree.map(
+                lambda a, b: a + b.astype(acc_dt), gsum, g)
+            return (gsum, lsum + loss), None
+
+        g0 = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, dtype=acc_dt), params)
+        (gsum, lsum), _ = jax.lax.scan(acc_fn, (g0, jnp.float32(0.0)), mbs)
+        grads = jax.tree.map(
+            lambda g: g.astype(jnp.float32) / n, gsum)
+        if tcfg.grad_compress:
+            grads, err = compress(grads, err)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        return new_params, new_opt, err, {"loss": lsum / n, "gnorm": gnorm}
+
+    return train_step
+
+
+class Trainer:
+    """Single-controller training driver (used by examples + launch/train)."""
+
+    def __init__(self, cfg: ArchConfig, tcfg: TrainConfig, pipeline,
+                 rng=None):
+        self.cfg, self.tcfg, self.pipeline = cfg, tcfg, pipeline
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.params = api.init_params(cfg, rng)
+        self.opt = make_optimizer(tcfg.optimizer, lr=tcfg.lr)
+        self.opt_state = self.opt.init(self.params)
+        self.err = (init_error_state(self.params)
+                    if tcfg.grad_compress else {})
+        self.step = 0
+        self._step_fn = jax.jit(make_train_step(cfg, tcfg, self.opt),
+                                donate_argnums=(0, 1, 2))
+        self.ckpt = (AsyncCheckpointer(tcfg.ckpt_dir)
+                     if tcfg.ckpt_dir else None)
+        self._ema = None
+        self.straggler_steps: list[int] = []
+        self.history: list[float] = []
+
+    # --- fault tolerance --------------------------------------------------
+    def try_restore(self) -> bool:
+        if not self.ckpt:
+            return False
+        self.ckpt.wait()   # an async save may still be in flight
+        state = {"params": self.params, "opt": self.opt_state,
+                 "err": self.err}
+        step, tree = restore_latest(self.tcfg.ckpt_dir, state)
+        if step is None:
+            return False
+        self.params = jax.tree.map(jnp.asarray, tree["params"])
+        self.opt_state = jax.tree.map(jnp.asarray, tree["opt"])
+        self.err = jax.tree.map(jnp.asarray, tree["err"])
+        self.step = step
+        return True
+
+    def run(self, num_steps: int, log_every: int = 10,
+            fail_at: int | None = None) -> list[float]:
+        """Train; ``fail_at`` injects a simulated crash (tests/examples)."""
+        while self.step < num_steps:
+            if fail_at is not None and self.step == fail_at:
+                fail_at = None
+                raise RuntimeError(f"injected failure at step {self.step}")
+            t0 = time.time()
+            batch = {k: jnp.asarray(v) for k, v in
+                     self.pipeline.batch(self.step).items()}
+            self.params, self.opt_state, self.err, metrics = self._step_fn(
+                self.params, self.opt_state, self.err, batch)
+            loss = float(metrics["loss"])
+            self.history.append(loss)
+            dt = time.time() - t0
+            if self._ema is None:
+                self._ema = dt
+            if dt > self.tcfg.straggler_factor * self._ema:
+                self.straggler_steps.append(self.step)
+            self._ema = 0.9 * self._ema + 0.1 * dt
+            self.step += 1
+            if self.ckpt and self.step % self.tcfg.ckpt_every == 0:
+                self.ckpt.save_async(self.step, {
+                    "params": self.params, "opt": self.opt_state,
+                    "err": self.err})
+            if log_every and self.step % log_every == 0:
+                print(f"step {self.step:5d} loss {loss:.4f} "
+                      f"({dt*1e3:.0f} ms)")
+        if self.ckpt:
+            self.ckpt.wait()
+        return self.history

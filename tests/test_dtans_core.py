@@ -1,0 +1,199 @@
+"""Unit + property tests for the dtANS codec (paper Algorithms 1-3, Sec. IV)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dtans import decode_scalar, encode_scalar, encoded_bits
+from repro.core.dtans_vec import (StackedTables, decode_lanes,
+                                  interleave_slice_with_pattern)
+from repro.core.entropy import entropy_bits, stream_entropy_bits
+from repro.core.params import PAPER, TOY, DtansParams
+from repro.core.tables import build_table, table_cross_entropy
+
+
+def _table_from(u, params, esc_raw_bits=32):
+    syms, counts = np.unique(u, return_counts=True)
+    if syms.size == 0:
+        syms, counts = np.asarray([0], np.uint64), np.asarray([1])
+    return build_table(syms.astype(np.uint64), counts, params,
+                       esc_raw_bits=esc_raw_bits)
+
+
+class TestParams:
+    def test_paper_constraints(self):
+        assert PAPER.K ** PAPER.l == PAPER.W ** PAPER.o  # exact unpack
+        assert PAPER.M ** PAPER.l == PAPER.W ** PAPER.f  # tight digit bound
+
+    def test_invalid_rejected(self):
+        with pytest.raises(ValueError):
+            DtansParams(w_bits=32, k_bits=12, l=8, o=4, f=2)  # K^l < W^o
+        with pytest.raises(ValueError):
+            DtansParams(w_bits=32, k_bits=12, l=8, o=3, f=1)  # M^l > W^f
+
+
+class TestTables:
+    def test_multiplicity_cap_and_budget(self):
+        rng = np.random.default_rng(0)
+        u = rng.choice(50, size=5000,
+                       p=(lambda p: p / p.sum())(
+                           1.0 / np.arange(1, 51) ** 1.5)).astype(np.uint64)
+        t = _table_from(u, PAPER)
+        assert t.slot_base.max() <= PAPER.M
+        assert t.used_slots <= PAPER.K
+        # consecutive slots per symbol, digits 0..base-1
+        for sym, fs in list(t.first_slot.items())[:10]:
+            b = t.slot_base[fs]
+            assert (t.slot_symbol[fs:fs + b] == sym).all()
+            assert (t.slot_digit[fs:fs + b] == np.arange(b)).all()
+
+    def test_cross_entropy_close_to_entropy(self):
+        rng = np.random.default_rng(1)
+        u = rng.choice(200, size=20000,
+                       p=(lambda p: p / p.sum())(
+                           1.0 / np.arange(1, 201))).astype(np.uint64)
+        syms, counts = np.unique(u, return_counts=True)
+        t = build_table(syms, counts, PAPER)
+        H = entropy_bits(counts)
+        Hp = table_cross_entropy(t, syms, counts)
+        # M-cap floors bits/sym at log2(K/M) = 4; allow that plus slack
+        assert Hp >= H - 1e-9
+        assert Hp <= max(H, 4.0) + 0.15
+
+    def test_single_symbol_corpus(self):
+        t = _table_from(np.zeros(10, np.uint64), PAPER)
+        assert t.base_of(0) == PAPER.M  # capped at M, not K
+        u = np.zeros(37, dtype=np.uint64)
+        enc = encode_scalar(u, PAPER, [t])
+        assert np.array_equal(decode_scalar(enc, PAPER, [t]), u)
+
+
+class TestScalarRoundtrip:
+    @pytest.mark.parametrize("params", [PAPER, TOY],
+                             ids=["paper", "toy"])
+    @pytest.mark.parametrize("n", [0, 1, 2, 7, 8, 9, 63, 64, 257])
+    def test_lengths(self, params, n):
+        rng = np.random.default_rng(n)
+        u = rng.integers(0, 5, size=n).astype(np.uint64)
+        t = _table_from(u, params)
+        enc = encode_scalar(u, params, [t])
+        assert np.array_equal(decode_scalar(enc, params, [t]), u)
+
+    def test_escape_roundtrip(self):
+        rng = np.random.default_rng(3)
+        # alphabet far larger than K forces escapes
+        u = rng.integers(0, 1 << 20, size=10000).astype(np.uint64)
+        t = _table_from(u, PAPER)
+        enc = encode_scalar(u, PAPER, [t])
+        assert sum(e.size for e in enc.esc) > 0
+        assert np.array_equal(decode_scalar(enc, PAPER, [t]), u)
+
+    def test_two_tables_interleaved_domains(self):
+        rng = np.random.default_rng(4)
+        l = PAPER.l
+        pattern = np.tile([0, 1], l // 2)
+        u = np.empty(400, dtype=np.uint64)
+        u[0::2] = rng.integers(0, 8, size=200)       # "delta" domain
+        u[1::2] = rng.integers(100, 164, size=200)   # "value" domain
+        k = np.arange(u.size) % l
+        t0 = _table_from(u[pattern[k] == 0], PAPER)
+        t1 = _table_from(u[pattern[k] == 1], PAPER)
+        enc = encode_scalar(u, PAPER, [t0, t1], pattern)
+        assert np.array_equal(decode_scalar(enc, PAPER, [t0, t1], pattern), u)
+
+    def test_compression_near_cross_entropy(self):
+        """Achieved bits/symbol tracks H' = H(P, P') (paper eq. (2))."""
+        rng = np.random.default_rng(5)
+        p = 1.0 / np.arange(1, 65) ** 1.0
+        p /= p.sum()
+        u = rng.choice(64, size=50000, p=p).astype(np.uint64)
+        syms, counts = np.unique(u, return_counts=True)
+        t = build_table(syms, counts, PAPER)
+        Hp = table_cross_entropy(t, syms, counts)
+        enc = encode_scalar(u, PAPER, [t])
+        bps = encoded_bits(enc, PAPER) / u.size
+        # within 5% + per-stream constant (o words head + tail padding)
+        assert bps <= Hp * 1.05 + (PAPER.o * 32 + 256) / u.size
+        assert bps >= Hp * 0.95  # sanity: can't beat cross-entropy
+
+    @settings(max_examples=60, deadline=None)
+    @given(data=st.data())
+    def test_property_roundtrip_paper(self, data):
+        n = data.draw(st.integers(0, 120))
+        nsym = data.draw(st.integers(1, 5000))
+        seed = data.draw(st.integers(0, 2 ** 31))
+        rng = np.random.default_rng(seed)
+        u = rng.integers(0, nsym, size=n).astype(np.uint64)
+        t = _table_from(u if n else np.zeros(1, np.uint64), PAPER)
+        enc = encode_scalar(u, PAPER, [t])
+        assert np.array_equal(decode_scalar(enc, PAPER, [t]), u)
+
+    @settings(max_examples=60, deadline=None)
+    @given(data=st.data())
+    def test_property_roundtrip_toy(self, data):
+        """Tiny word size stresses the conditional-load machinery."""
+        n = data.draw(st.integers(0, 60))
+        seed = data.draw(st.integers(0, 2 ** 31))
+        rng = np.random.default_rng(seed)
+        u = rng.integers(0, 4, size=n).astype(np.uint64)
+        t = _table_from(u if n else np.zeros(1, np.uint64), TOY)
+        enc = encode_scalar(u, TOY, [t])
+        assert np.array_equal(decode_scalar(enc, TOY, [t]), u)
+
+
+class TestVectorizedLanes:
+    @settings(max_examples=25, deadline=None)
+    @given(data=st.data())
+    def test_property_lockstep_equals_scalar(self, data):
+        lanes = data.draw(st.integers(1, 24))
+        seed = data.draw(st.integers(0, 2 ** 31))
+        nsym = data.draw(st.sampled_from([4, 300, 100000]))
+        rng = np.random.default_rng(seed)
+        us = [rng.integers(0, nsym, size=int(rng.integers(0, 90)))
+              .astype(np.uint64) for _ in range(lanes)]
+        allu = (np.concatenate(us) if sum(u.size for u in us)
+                else np.zeros(1, np.uint64))
+        t = _table_from(allu, PAPER)
+        pattern = np.zeros(PAPER.l, dtype=np.int64)
+        encs = [encode_scalar(u, PAPER, [t], pattern) for u in us]
+        sl = interleave_slice_with_pattern(encs, PAPER, pattern, 1)
+        out = decode_lanes(sl, PAPER, StackedTables.stack([t]), pattern)
+        for i, u in enumerate(us):
+            assert np.array_equal(out[i, :u.size], u), f"lane {i}"
+
+    def test_stream_is_fully_consumed(self):
+        rng = np.random.default_rng(7)
+        us = [rng.integers(0, 30, size=rng.integers(1, 64))
+              .astype(np.uint64) for _ in range(16)]
+        t = _table_from(np.concatenate(us), PAPER)
+        pattern = np.zeros(PAPER.l, dtype=np.int64)
+        encs = [encode_scalar(u, PAPER, [t], pattern) for u in us]
+        sl = interleave_slice_with_pattern(encs, PAPER, pattern, 1)
+        assert sl.stream.size == sum(e.n_words for e in encs)
+        assert (sl.stream < PAPER.W).all()
+
+
+class TestDelta:
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 2 ** 31))
+    def test_roundtrip(self, seed):
+        from repro.core.delta import delta_decode_rows, delta_encode_rows
+        rng = np.random.default_rng(seed)
+        m, n = int(rng.integers(1, 40)), int(rng.integers(1, 200))
+        dense = (rng.random((m, n)) < 0.2).astype(np.float64)
+        from repro.sparse.formats import CSR
+        a = CSR.from_dense(dense)
+        d = delta_encode_rows(a.indptr, a.indices)
+        assert (d >= 0).all()
+        back = delta_decode_rows(a.indptr, d)
+        assert np.array_equal(back, a.indices)
+
+    def test_entropy_reduction_on_structure(self):
+        """Fig. 4's premise: deltas of structured sparsity have lower
+        entropy than raw column indices."""
+        from repro.core.delta import delta_encode_rows
+        from repro.sparse.random_graphs import stencil_2d
+        a = stencil_2d(60)
+        h_raw = stream_entropy_bits(a.indices)
+        h_delta = stream_entropy_bits(delta_encode_rows(a.indptr, a.indices))
+        assert h_delta < 0.6 * h_raw

@@ -1,0 +1,107 @@
+"""Roofline infrastructure tests: the trip-count-aware HLO walker and the
+roofline-term arithmetic."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import HloCostModel, analyze
+from repro.launch.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS, Roofline,
+                                   collective_bytes, model_flops)
+
+
+def _scan_matmul(length=100, n=128):
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, None, length=length)
+        return out
+    sds = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    return jax.jit(f).lower(sds, sds).compile()
+
+
+class TestHloWalker:
+    def test_xla_cost_analysis_misses_trip_counts(self):
+        """Documents WHY the walker exists."""
+        c = _scan_matmul()
+        xla_flops = float(c.cost_analysis().get("flops", 0.0))
+        assert xla_flops < 2 * 128 ** 3 * 2  # body counted ~once
+
+    def test_walker_multiplies_trip_counts(self):
+        c = _scan_matmul()
+        costs = analyze(c.as_text())
+        expected = 2 * 128 ** 3 * 100
+        assert abs(costs.flops - expected) / expected < 0.05
+
+    def test_dot_flops_from_contracting_dims(self):
+        a = jax.ShapeDtypeStruct((64, 256), jnp.float32)
+        b = jax.ShapeDtypeStruct((256, 32), jnp.float32)
+        c = jax.jit(lambda x, y: x @ y).lower(a, b).compile()
+        costs = analyze(c.as_text())
+        assert abs(costs.flops - 2 * 64 * 256 * 32) / costs.flops < 0.05
+
+    def test_nested_scan(self):
+        def f(x, w):
+            def outer(c, _):
+                def inner(ci, _):
+                    return ci @ w, None
+                c, _ = jax.lax.scan(inner, c, None, length=5)
+                return c, None
+            out, _ = jax.lax.scan(outer, x, None, length=7)
+            return out
+        sds = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+        c = jax.jit(f).lower(sds, sds).compile()
+        costs = analyze(c.as_text())
+        expected = 2 * 32 ** 3 * 35
+        assert abs(costs.flops - expected) / expected < 0.1
+
+    def test_sliced_stack_not_fully_charged(self):
+        """A scanned weight stack read via dynamic-slice must be charged
+        at slice size, not stack size."""
+        def f(x, stack):
+            def body(c, w):
+                return jnp.tanh(c @ w), None
+            out, _ = jax.lax.scan(body, x, stack)
+            return out
+        x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        stack = jax.ShapeDtypeStruct((50, 64, 64), jnp.float32)
+        c = jax.jit(f).lower(x, stack).compile()
+        costs = analyze(c.as_text())
+        # 50 iterations x (~4 buffers x 16KB) — full-stack charging would
+        # be 50 x 820KB = 41 MB; assert we stay well under that
+        assert costs.bytes < 2e7
+
+
+class TestRooflineTerms:
+    def test_term_arithmetic_and_dominance(self):
+        r = Roofline.from_costs(flops=PEAK_FLOPS, hbm_bytes=HBM_BW / 2,
+                                coll_bytes=ICI_BW)
+        assert r.compute_s == pytest.approx(1.0)
+        assert r.memory_s == pytest.approx(0.5)
+        assert r.collective_s == pytest.approx(0.25)
+        assert r.dominant == "compute"
+
+    def test_model_flops_dense_vs_moe(self):
+        from repro.configs import get
+        from repro.models.config import SHAPES
+        dense = model_flops(get("yi-9b"), SHAPES["train_4k"], "train")
+        # 6 * N * D
+        assert dense == pytest.approx(6 * 8.83e9 * 256 * 4096, rel=0.05)
+        moe = model_flops(get("qwen3-moe-30b-a3b"), SHAPES["train_4k"],
+                          "train")
+        # active ~3B of 30B total: far below 6*30e9*D
+        assert moe < 6 * 15e9 * 256 * 4096
+
+    def test_collective_regex_parser(self):
+        text = """
+ENTRY %main (p: f32[16]) -> f32[16] {
+  %p = f32[16]{0} parameter(0)
+  %ar = f32[16]{0} all-reduce(%p), replica_groups={}, to_apply=%add
+  ROOT %ag = f32[64]{0} all-gather(%ar), dimensions={0}
+}
+"""
+        out = collective_bytes(text)
+        assert out["counts"]["all-reduce"] == 1
+        assert out["weighted"]["all-reduce"] == 2 * 16 * 4  # ring 2x
+        assert out["counts"]["all-gather"] == 1

@@ -1,0 +1,58 @@
+"""Serving tests: SparseLinear correctness + compression, engine batching."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import api
+from repro.serving.engine import Engine
+from repro.serving.sparse_linear import SparseLinear
+
+
+@pytest.fixture(scope="module")
+def sl():
+    rng = np.random.default_rng(0)
+    w = (rng.standard_normal((256, 640)) / 10).astype(np.float32)
+    return SparseLinear.from_dense(w, sparsity=0.7, value_bits=6,
+                                   lane_width=32)
+
+
+class TestSparseLinear:
+    def test_apply_matches_dense_reference(self, sl):
+        x = jax.random.normal(jax.random.PRNGKey(0), (5, 256),
+                              dtype=jnp.float32)
+        got = np.asarray(sl.apply(x))
+        want = np.asarray(sl.apply_dense_reference(x))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_single_vector_path(self, sl):
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 256),
+                              dtype=jnp.float32)
+        got = np.asarray(sl.apply(x))
+        want = np.asarray(sl.apply_dense_reference(x))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_compresses_vs_dense(self, sl):
+        assert sl.compression_vs_dense > 1.5
+        assert sl.compressed_bytes < sl.dense_bytes
+
+    def test_3d_input(self, sl):
+        x = jax.random.normal(jax.random.PRNGKey(2), (2, 3, 256),
+                              dtype=jnp.float32)
+        assert sl.apply(x).shape == (2, 3, 640)
+
+
+class TestEngine:
+    def test_batched_serving_drains(self):
+        cfg = get_smoke("smollm-135m").with_(vocab=64)
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        eng = Engine(cfg, params, slots=3, max_seq=32)
+        rng = np.random.default_rng(0)
+        reqs = [eng.submit(rng.integers(0, 64, size=4), 5)
+                for _ in range(5)]
+        eng.run_until_drained()
+        assert all(r.done for r in reqs)
+        assert all(len(r.out) == 5 for r in reqs)
+        assert all(0 <= t < 64 for r in reqs for t in r.out)
