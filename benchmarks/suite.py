@@ -1,38 +1,32 @@
-"""Benchmark matrix suite + the TPU performance model shared by the
-SpMVM benchmarks.
+"""Benchmark matrix suite (the performance model now lives in
+`repro.autotune.cost_model`; this module is a thin consumer).
 
 Matrices are synthetic stand-ins for the SuiteSparse families the paper
 evaluates (stencils / banded systems / random-graph adjacency / pruned NN
 weights / incompressible-value matrices). Each generator is deterministic.
 
-Performance model (v5e, per chip): SpMVM is memory-bound; runtime of a
-format = two-level memory time + decode-compute time:
-
-    t = miss_bytes / HBM_BW + hit_bytes / CACHE_BW + ops / VPU_RATE
-
-with hit_bytes = min(bytes, CACHE) for warm cache (the paper's 96 MB GPU
-L2 has the v5e CMEM/VMEM-resident working set as its analogue), 0 for
-cold. dtANS adds ~DECODE_OPS_PER_NNZ vector ops per nonzero (segment
-unpack + table gathers + limb update; counted from kernels/common.py).
-This mirrors the paper's observation that warm caches shift the bottleneck
-from bytes to decode throughput (Section V-B vs V-C).
+`model_time` / `spmv_bytes` and the machine constants are re-exported
+for the benchmark sections; see `repro.autotune.cost_model.MachineModel`
+for the model itself (two-level memory time + decode-compute term).
 """
 
 from __future__ import annotations
 
 import numpy as np
 
+from repro.autotune.cost_model import V5E, model_time, spmv_bytes  # noqa: F401 (re-exported)
 from repro.sparse.formats import CSR
 from repro.sparse.prune import codebook_quantize, magnitude_prune
 from repro.sparse.random_graphs import (banded, barabasi_albert,
                                         erdos_renyi, stencil_2d,
                                         watts_strogatz)
 
-HBM_BW = 819e9          # bytes/s
-CACHE_BW = 4 * HBM_BW   # VMEM-resident reread bandwidth (model)
-CACHE_BYTES = 96e6      # paper's L2 size, kept for comparability
-VPU_RATE = 1.9e12       # vector ops/s (8x128 lanes x 2 ALUs x 0.94 GHz)
-DECODE_OPS_PER_NNZ = 16  # unpack+2 gathers+limb ops per nonzero (approx)
+# Backwards-compatible constant names (now sourced from the V5E model).
+HBM_BW = V5E.hbm_bw
+CACHE_BW = V5E.cache_bw
+CACHE_BYTES = V5E.cache_bytes
+VPU_RATE = V5E.vpu_rate
+DECODE_OPS_PER_NNZ = V5E.decode_ops_per_nnz
 
 
 def nn_weight(rows=2048, cols=2048, sparsity=0.85, seed=0,
@@ -92,16 +86,3 @@ def cached_encode(name: str, a, bits: int):
     return _ENC_CACHE[key]
 
 
-def spmv_bytes(fmt_bytes: int, n: int, m: int, vbytes: int) -> int:
-    """Bytes moved by one SpMVM: matrix + x + y (paper Section III-A)."""
-    return fmt_bytes + n * vbytes + m * vbytes
-
-
-def model_time(bytes_moved: int, nnz: int, *, warm: bool,
-               decode: bool) -> float:
-    hit = min(bytes_moved, CACHE_BYTES) if warm else 0.0
-    miss = bytes_moved - hit
-    t = miss / HBM_BW + hit / CACHE_BW
-    if decode:
-        t += nnz * DECODE_OPS_PER_NNZ / VPU_RATE
-    return t

@@ -6,10 +6,13 @@ on-the-fly entropy decoding (paper Fig. 1 end to end).
 
 import numpy as np
 
+from repro.autotune import DecisionCache, select
 from repro.core.csr_dtans import decode_matrix, encode_matrix
 from repro.kernels import ops
-from repro.sparse.formats import best_baseline_nbytes
-from repro.sparse.random_graphs import stencil_2d
+from repro.serving.sparse_linear import SparseLinear
+from repro.sparse.formats import CSR, best_baseline_nbytes
+from repro.sparse.random_graphs import (erdos_renyi, stencil_2d,
+                                        watts_strogatz)
 
 
 def main():
@@ -40,6 +43,33 @@ def main():
         y_ref[i] = (a.values[lo:hi] * x[a.indices[lo:hi]]).sum()
     np.testing.assert_allclose(y, y_ref, rtol=1e-10)
     print(f"fused decode+SpMVM: OK  (y[:4] = {y[:4].round(4)})")
+
+    # 5. automatic format selection (repro.autotune; paper Fig. 9 without
+    #    the AlphaSparse tuning bill): fingerprint each matrix, pick the
+    #    modeled-fastest of {CSR, COO, SELL, CSR-dtANS x configs}.
+    cache = DecisionCache(path=None)
+    graphs = {
+        "erdos_renyi": erdos_renyi(2000, 10, rng),
+        "watts_strogatz": watts_strogatz(2000, 5, 0.1, rng),
+    }
+    for name, g in graphs.items():
+        g32 = CSR(g.indptr, g.indices, g.values.astype(np.float32),
+                  g.shape)
+        for warm in (True, False):
+            d = select(g32, warm=warm, cache=cache)
+            regime = "warm" if warm else "cold"
+            print(f"autotune[{name:14s}|{regime}]: {d.config_name:22s}"
+                  f" {d.nbytes:,} B, modeled {d.modeled_time*1e6:.2f} us")
+
+    # 6. serving integration: a SparseLinear layer with auto=True lets the
+    #    tuner choose the CSR-dtANS lane width / table sharing per weight.
+    w = (rng.standard_normal((256, 512)) / 16).astype(np.float32)
+    sl = SparseLinear.from_dense(w, sparsity=0.85, auto=True,
+                                 autotune_cache=cache)
+    d = sl.decision
+    print(f"SparseLinear(auto=True): {d.config_name}, "
+          f"{sl.compressed_bytes:,} B "
+          f"({sl.compression_vs_dense:.2f}x vs dense)")
 
 
 if __name__ == "__main__":

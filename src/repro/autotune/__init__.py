@@ -1,0 +1,38 @@
+"""repro.autotune: per-matrix format selection and kernel autotuning.
+
+The paper's Fig. 9 argues per-matrix format tuning is valuable but — in
+AlphaSparse form — prohibitively expensive. This package is the cheap
+version: fingerprint the sparsity structure (`fingerprint`), predict
+runtime and encoded size of each candidate format under a roofline
+machine model (`cost_model`), search the candidates with an optional
+measured-refinement budget (`search.select`), and remember decisions in
+a persistent cache (`cache.DecisionCache`).
+
+    from repro.autotune import select
+    decision = select(csr_matrix)          # Decision(fmt="sell", ...)
+    decision = select(csr_matrix, warm=False, budget=2)  # refine top-2
+"""
+
+from repro.autotune.cache import (DecisionCache, default_cache,
+                                  default_cache_path)
+from repro.autotune.cost_model import (DTANS_LANE_WIDTHS, V5E, Candidate,
+                                       MachineModel, candidates,
+                                       coo_nbytes, csr_nbytes,
+                                       dtans_config_name,
+                                       dtans_nbytes_estimate, model_time,
+                                       sell_nbytes, spmv_bytes)
+from repro.autotune.fingerprint import (Fingerprint, codeable_bits,
+                                        fingerprint)
+from repro.autotune.search import (ALL_FORMATS, Decision,
+                                   choose_dtans_config, clear_memo,
+                                   select)
+
+__all__ = [
+    "ALL_FORMATS", "Candidate", "Decision", "DecisionCache",
+    "DTANS_LANE_WIDTHS", "Fingerprint", "MachineModel", "V5E",
+    "candidates", "choose_dtans_config", "clear_memo", "codeable_bits",
+    "coo_nbytes", "csr_nbytes", "default_cache", "default_cache_path",
+    "dtans_config_name",
+    "dtans_nbytes_estimate", "fingerprint", "model_time", "select",
+    "sell_nbytes", "spmv_bytes",
+]

@@ -1,0 +1,106 @@
+"""Persistent decision cache for the format autotuner.
+
+Decisions are keyed by ``fingerprint hash | machine | model knobs`` so a
+serving process that re-loads the same matrix (same structure, same
+values) skips the candidate search entirely — the AlphaSparse overhead
+the paper calls "extreme" becomes a dictionary lookup on every run after
+the first.
+
+Storage is a single JSON file (human-inspectable, atomic-rename writes).
+Default location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
+``~/.cache/repro/autotune.json``. A cache constructed with
+``path=None`` is memory-only (used by tests and benchmarks).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+_ENV_VAR = "REPRO_AUTOTUNE_CACHE"
+
+
+def default_cache_path() -> str:
+    env = os.environ.get(_ENV_VAR)
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "autotune.json")
+
+
+class DecisionCache:
+    """key (str) -> decision (JSON-serializable dict)."""
+
+    def __init__(self, path: str | os.PathLike | None = "default"):
+        if path == "default":
+            path = default_cache_path()
+        self.path = os.fspath(path) if path is not None else None
+        self._mem: dict | None = None
+
+    # -- internals ------------------------------------------------------
+    def _load(self) -> dict:
+        if self._mem is None:
+            self._mem = {}
+            if self.path and os.path.exists(self.path):
+                try:
+                    with open(self.path) as f:
+                        data = json.load(f)
+                    if isinstance(data, dict):
+                        self._mem = data
+                except (OSError, ValueError):
+                    pass  # corrupt/unreadable cache == empty cache
+        return self._mem
+
+    def _persist(self) -> None:
+        if not self.path:
+            return
+        d = os.path.dirname(self.path) or "."
+        tmp = None
+        try:
+            os.makedirs(d, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+            with os.fdopen(fd, "w") as f:
+                json.dump(self._mem, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except OSError:
+            # An unwritable cache degrades to memory-only; selection
+            # must never fail because persistence did.
+            if tmp is not None:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+
+    # -- API ------------------------------------------------------------
+    def get(self, key: str) -> dict | None:
+        return self._load().get(key)
+
+    def put(self, key: str, decision: dict) -> None:
+        self._load()[key] = decision
+        self._persist()
+
+    def clear(self) -> None:
+        self._mem = {}
+        if self.path and os.path.exists(self.path):
+            try:
+                os.unlink(self.path)
+            except OSError:
+                pass
+
+    def __len__(self) -> int:
+        return len(self._load())
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._load()
+
+
+_default: DecisionCache | None = None
+
+
+def default_cache() -> DecisionCache:
+    """Process-wide cache at the default on-disk location."""
+    global _default
+    if _default is None:
+        _default = DecisionCache()
+    return _default

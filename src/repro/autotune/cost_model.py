@@ -1,0 +1,207 @@
+"""Roofline-style cost model for sparse formats on one accelerator chip.
+
+This is the library home of the performance model that previously lived
+in ``benchmarks/suite.py``: SpMVM is memory-bound, so the runtime of a
+format is two-level memory time plus (for entropy-coded formats) a
+decode-compute term:
+
+    t = miss_bytes / hbm_bw + hit_bytes / cache_bw + ops / vpu_rate
+
+with ``hit_bytes = min(bytes, cache_bytes)`` for a warm cache (the
+paper's 96 MB GPU L2 has the v5e CMEM/VMEM-resident working set as its
+analogue) and 0 for a cold one. CSR-dtANS adds ``decode_ops_per_nnz``
+vector ops per nonzero (segment unpack + table gathers + limb update,
+counted from ``kernels/common.py``). This mirrors the paper's
+observation that warm caches shift the bottleneck from bytes to decode
+throughput (Section V-B vs V-C), and is the predictor behind the
+paper-Fig. 9 format-selection question that `repro.autotune.select`
+answers per matrix.
+
+Byte counts for CSR/COO/SELL are *exact* given a fingerprint; CSR-dtANS
+bytes are estimated from the fingerprint's escape-aware entropy features
+(see `fingerprint.codeable_bits`) and can be refined by actually
+encoding (``search.select(budget=...)``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.autotune.fingerprint import Fingerprint
+from repro.core.params import PAPER, DtansParams
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineModel:
+    """Per-chip machine constants of the roofline model."""
+
+    name: str = "v5e"
+    hbm_bw: float = 819e9            # bytes/s
+    cache_bw: float = 4 * 819e9      # VMEM-resident reread bandwidth
+    cache_bytes: float = 96e6        # paper's L2 size, for comparability
+    vpu_rate: float = 1.9e12         # vector ops/s (8x128 x 2 ALUs)
+    decode_ops_per_nnz: float = 16   # unpack + 2 gathers + limb ops
+
+    def signature(self) -> str:
+        """Cache-key component: the *constants*, not just the name, so
+        recalibrating a model never serves stale cached decisions."""
+        return (f"{self.name}:{self.hbm_bw:g}:{self.cache_bw:g}:"
+                f"{self.cache_bytes:g}:{self.vpu_rate:g}:"
+                f"{self.decode_ops_per_nnz:g}")
+
+
+def dtans_config_name(lane_width: int, shared_table: bool) -> str:
+    """Canonical display/lookup name of one CSR-dtANS configuration.
+
+    Single source of truth — `Candidate.config_name`,
+    `search.Decision.config_name`, the benchmarks and the tests all key
+    result tables by this string.
+    """
+    tables = "shared" if shared_table else "split"
+    return f"dtans[w={lane_width},{tables}]"
+
+
+#: Default chip model (TPU v5e), numerically identical to the constants
+#: the benchmarks have always used.
+V5E = MachineModel()
+
+#: dtANS configurations enumerated by the tuner: GPU-warp and TPU-lane
+#: interleave widths x shared vs per-domain coding tables.
+DTANS_LANE_WIDTHS = (32, 128)
+DTANS_SHARED_TABLE = (True, False)
+
+
+def spmv_bytes(fmt_bytes: int, n: int, m: int, vbytes: int) -> int:
+    """Bytes moved by one SpMVM: matrix + x + y (paper Section III-A)."""
+    return fmt_bytes + n * vbytes + m * vbytes
+
+
+def model_time(bytes_moved: int, nnz: int, *, warm: bool, decode: bool,
+               machine: MachineModel = V5E) -> float:
+    """Modeled seconds of one SpMVM pass."""
+    hit = min(bytes_moved, machine.cache_bytes) if warm else 0.0
+    miss = bytes_moved - hit
+    t = miss / machine.hbm_bw + hit / machine.cache_bw
+    if decode:
+        t += nnz * machine.decode_ops_per_nnz / machine.vpu_rate
+    return t
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One (format, config) point with its size and modeled runtime."""
+
+    fmt: str                      # "csr" | "coo" | "sell" | "dtans"
+    nbytes: int                   # format bytes (estimated or exact)
+    modeled_time: float           # seconds per SpMVM pass
+    exact_size: bool              # True when nbytes is not an estimate
+    lane_width: int | None = None      # dtans only
+    shared_table: bool | None = None   # dtans only
+
+    @property
+    def config_name(self) -> str:
+        if self.fmt != "dtans":
+            return self.fmt
+        return dtans_config_name(self.lane_width, self.shared_table)
+
+
+def csr_nbytes(fp: Fingerprint) -> int:
+    return fp.nnz * (4 + fp.value_bytes) + (fp.rows + 1) * 4
+
+
+def coo_nbytes(fp: Fingerprint) -> int:
+    return fp.nnz * (8 + fp.value_bytes)
+
+
+def sell_nbytes(fp: Fingerprint) -> int:
+    from repro.autotune.fingerprint import SELL_SLICE_HEIGHT
+    nslices = -(-fp.rows // SELL_SLICE_HEIGHT)
+    return (fp.sell_padded_nnz * (4 + fp.value_bytes)
+            + (nslices + 1) * 4)
+
+
+def dtans_nbytes_estimate(fp: Fingerprint, *, lane_width: int = 128,
+                          shared_table: bool = True,
+                          params: DtansParams = PAPER) -> int:
+    """Estimated `CSRdtANS.nbytes` from fingerprint features alone.
+
+    Mirrors the exact accounting in `repro.core.csr_dtans.CSRdtANS`:
+    tables + 4-byte stream words + escaped raw payloads + one 4-byte
+    per-row length + per-slice offsets.
+
+    The stream-word count uses the encoder's segment mechanics rather
+    than raw entropy: every l-symbol segment emits ``o`` words minus the
+    conditional-load extractions it earns, extraction happens only on
+    non-final segments of a row (``encode_scalar`` branches only while
+    ``j < nseg - 1``), and each extraction is a whole 32-bit word — so a
+    segment carrying ``b`` information bits extracts
+    ``clip(floor((o*32 - b) / 32), 0, f)`` words. Information bits per
+    symbol come from the fingerprint's escape-aware table estimate.
+    """
+    vb = fp.value_bytes
+    K = params.K
+    T = 1 if shared_table else 2
+    n_slices = -(-fp.rows // lane_width) if fp.rows else 0
+
+    symbols = 2 * fp.nnz + fp.segment_pad_symbols
+    if shared_table:
+        real_bps = fp.merged_stream_bits
+    else:
+        real_bps = (fp.delta_stream_bits + fp.value_stream_bits) / 2.0
+    # Tail padding uses the cheapest in-table symbol: log2(K/M) bits.
+    pad_bps = params.k_bits - params.m_bits
+    bps = ((2 * fp.nnz * real_bps + fp.segment_pad_symbols * pad_bps)
+           / symbols) if symbols else 0.0
+
+    seg_bits = params.l * bps
+    extracts = min(max(math.floor((params.o * 32 - seg_bits) / 32.0), 0),
+                   params.f)
+    n_nonlast = fp.n_segments - fp.nonempty_rows
+    stream_words = params.o * fp.n_segments - extracts * n_nonlast
+    stream_bytes = 4 * stream_words
+
+    esc_bytes = int(fp.delta_escape_frac * fp.nnz) * 4
+    esc_bytes += int(fp.value_escape_frac * fp.nnz) * vb
+
+    b = T * K * (vb + 8)                 # coding tables
+    b += stream_bytes
+    b += esc_bytes
+    b += fp.rows * 4                     # per-row n
+    b += (n_slices + 1) * 8              # stream offsets
+    b += (n_slices + 1) * 4 * T          # escape offsets
+    return int(b)
+
+
+def candidates(fp: Fingerprint, *, machine: MachineModel = V5E,
+               warm: bool = True, params: DtansParams = PAPER,
+               formats: tuple = ("csr", "coo", "sell", "dtans"),
+               lane_widths: tuple = DTANS_LANE_WIDTHS) -> list[Candidate]:
+    """Enumerate candidate formats, cheapest modeled time first."""
+    m, n, vb = fp.rows, fp.cols, fp.value_bytes
+
+    def t(nbytes: int, decode: bool) -> float:
+        return model_time(spmv_bytes(nbytes, n, m, vb), fp.nnz,
+                          warm=warm, decode=decode, machine=machine)
+
+    out: list[Candidate] = []
+    exact = {"csr": csr_nbytes, "coo": coo_nbytes, "sell": sell_nbytes}
+    for fmt in formats:
+        if fmt in exact:
+            b = exact[fmt](fp)
+            out.append(Candidate(fmt=fmt, nbytes=b, modeled_time=t(b, False),
+                                 exact_size=True))
+        elif fmt == "dtans":
+            for w in lane_widths:
+                for shared in DTANS_SHARED_TABLE:
+                    b = dtans_nbytes_estimate(fp, lane_width=w,
+                                              shared_table=shared,
+                                              params=params)
+                    out.append(Candidate(
+                        fmt="dtans", nbytes=b, modeled_time=t(b, True),
+                        exact_size=False, lane_width=w,
+                        shared_table=shared))
+        else:
+            raise ValueError(f"unknown format {fmt!r}")
+    out.sort(key=lambda c: c.modeled_time)
+    return out

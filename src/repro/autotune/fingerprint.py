@@ -1,0 +1,213 @@
+"""Cheap sparsity-structure fingerprints for format selection.
+
+A fingerprint is a small, hashable summary of a CSR matrix: shape/nnz
+statistics, structural features (bandwidth, SELL padding), and
+entropy-based compressibility estimates for the delta and value symbol
+domains (paper Section IV-A: delta-encoding collapses structured column
+indices onto a low-entropy distribution; Fig. 9 motivates picking a
+format *per matrix* without AlphaSparse-scale tuning cost).
+
+Everything here is O(nnz) or better, deterministic (strided subsampling,
+no RNG), and orders of magnitude cheaper than actually encoding the
+matrix — the point is that `autotune.select` can run per matrix at
+serving time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+
+import numpy as np
+
+from repro.core.delta import delta_encode_rows
+from repro.core.entropy import entropy_bits
+from repro.core.params import PAPER, DtansParams
+
+#: Max symbols per domain used for the entropy estimates. Strided (not
+#: random) subsampling keeps fingerprints deterministic.
+SAMPLE_CAP = 1 << 16
+
+#: Slice height used for the exact SELL padding feature (matches
+#: `repro.sparse.formats.SELL.from_csr`'s default).
+SELL_SLICE_HEIGHT = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class Fingerprint:
+    """Structure features of one sparse matrix (all deterministic)."""
+
+    rows: int
+    cols: int
+    nnz: int
+    value_bytes: int            # itemsize of the value dtype
+    row_nnz_mean: float
+    row_nnz_cv: float           # coefficient of variation (std/mean)
+    row_nnz_max: int
+    bandwidth: int              # max |col - row| over nonzeros
+    sell_padded_nnz: int        # exact stored entries of SELL (slice 32)
+    segment_pad_symbols: int    # per-row padding to l-symbol segments
+    n_segments: int             # total l-symbol segments over all rows
+    nonempty_rows: int
+    delta_entropy_bits: float   # empirical H of sampled column deltas
+    value_entropy_bits: float   # empirical H of sampled value bit patterns
+    distinct_deltas: int        # within the sample
+    distinct_values: int        # within the sample
+    content_checksum: int       # cheap hash of sampled symbol content
+    # Escape-aware achievable bits/symbol under a (K, M)-constrained dtANS
+    # table (stream bits only; escape raw bits are accounted separately):
+    delta_stream_bits: float
+    value_stream_bits: float
+    merged_stream_bits: float   # shared delta+value table (paper default)
+    delta_escape_frac: float
+    value_escape_frac: float
+
+    def key(self) -> str:
+        """Stable content hash — the on-disk decision-cache key."""
+        d = dataclasses.asdict(self)
+        for k, v in d.items():
+            if isinstance(v, float):
+                d[k] = round(v, 6)
+        blob = json.dumps(d, sort_keys=True).encode()
+        return hashlib.sha1(blob).hexdigest()[:16]
+
+
+def _sample(arr: np.ndarray, cap: int) -> np.ndarray:
+    """Deterministic strided subsample of at most ``cap`` elements."""
+    if arr.size <= cap:
+        return arr
+    idx = np.linspace(0, arr.size - 1, cap).astype(np.int64)
+    return arr[idx]
+
+
+def _value_bit_patterns(values: np.ndarray) -> np.ndarray:
+    """Values -> uint64 bit patterns (the dtANS value-domain symbols)."""
+    dt = values.dtype
+    if dt == np.float64:
+        return values.view(np.uint64)
+    if dt == np.float32:
+        return values.view(np.uint32).astype(np.uint64)
+    # Fallback for integer matrices: the raw values are the symbols.
+    return values.astype(np.uint64, casting="unsafe")
+
+
+def codeable_bits(counts: np.ndarray, params: DtansParams = PAPER,
+                  esc_raw_bits: int = 32) -> tuple[float, float]:
+    """Estimate (stream bits/symbol, escape fraction) of a dtANS table.
+
+    Vectorized approximation of `repro.core.tables.build_table`'s greedy
+    allocation: the most frequent symbols get in-table multiplicities
+    proportional to their counts (capped at M, at least 1); everything
+    else escapes through a shared ESC symbol. A symbol also escapes when
+    its in-table cost exceeds its escape cost (digit bits + raw bits) —
+    the same eviction rule build_table applies.
+
+    Returned stream bits *exclude* the ``esc_raw_bits`` raw payload of
+    escaped symbols (those bytes live in the separate escape stream, as
+    in `CSRdtANS.nbytes` accounting); the escape fraction lets the cost
+    model charge them.
+    """
+    c = np.asarray(counts, dtype=np.float64)
+    c = np.sort(c[c > 0])[::-1]
+    total = c.sum()
+    if total == 0:
+        return 0.0, 0.0
+    K, M = params.K, params.M
+    n_in = min(c.size, K - 1)
+    in_c, tail = c[:n_in], c[n_in:].sum()
+
+    mult = np.clip(np.floor(K * in_c / total), 1, M)
+    budget = K - (1 if (tail > 0 or c.size > n_in) else 0)
+    if mult.sum() > budget:
+        scale = budget / mult.sum()
+        mult = np.maximum(1.0, np.floor(mult * scale))
+    esc_mult = max(1.0, K - mult.sum())
+
+    keep_bits = -np.log2(mult / K)
+    esc_digit_bits = -np.log2(esc_mult / K)
+    evict = keep_bits > esc_digit_bits + esc_raw_bits
+    esc_count = tail + in_c[evict].sum()
+    stream_bits = ((in_c[~evict] * keep_bits[~evict]).sum()
+                   + esc_count * esc_digit_bits)
+    return float(stream_bits / total), float(esc_count / total)
+
+
+def fingerprint(a, params: DtansParams = PAPER,
+                sample_cap: int = SAMPLE_CAP) -> Fingerprint:
+    """Fingerprint a `repro.sparse.formats.CSR` matrix."""
+    m, n = a.shape
+    indptr = np.asarray(a.indptr, dtype=np.int64)
+    indices = np.asarray(a.indices, dtype=np.int64)
+    row_nnz = np.diff(indptr)
+    nnz = int(row_nnz.sum())
+    vb = int(a.values.dtype.itemsize)
+    value_bits = vb * 8
+    esc_raw_value = max(32, value_bits)
+
+    if nnz == 0:
+        return Fingerprint(
+            rows=m, cols=n, nnz=0, value_bytes=vb, row_nnz_mean=0.0,
+            row_nnz_cv=0.0, row_nnz_max=0, bandwidth=0, sell_padded_nnz=0,
+            segment_pad_symbols=0, n_segments=0, nonempty_rows=0,
+            delta_entropy_bits=0.0, value_entropy_bits=0.0,
+            distinct_deltas=0, distinct_values=0, content_checksum=0,
+            delta_stream_bits=0.0,
+            value_stream_bits=0.0, merged_stream_bits=0.0,
+            delta_escape_frac=0.0, value_escape_frac=0.0)
+
+    mean = float(row_nnz.mean())
+    cv = float(row_nnz.std() / mean) if mean > 0 else 0.0
+
+    row_of = np.repeat(np.arange(m, dtype=np.int64), row_nnz)
+    bandwidth = int(np.abs(indices - row_of).max())
+
+    C = SELL_SLICE_HEIGHT
+    nsl = (m + C - 1) // C
+    padded = np.zeros(nsl * C, dtype=np.int64)
+    padded[:m] = row_nnz
+    sell_padded = int(padded.reshape(nsl, C).max(axis=1).sum() * C)
+
+    ell = params.l
+    syms_per_row = 2 * row_nnz
+    seg_pad = int((-syms_per_row % ell)[row_nnz > 0].sum())
+    n_segments = int(((syms_per_row + ell - 1) // ell).sum())
+    nonempty_rows = int((row_nnz > 0).sum())
+
+    deltas = _sample(delta_encode_rows(indptr, indices).astype(np.uint64),
+                     sample_cap)
+    vbits = _sample(_value_bit_patterns(np.ascontiguousarray(a.values)),
+                    sample_cap)
+    _, dcounts = np.unique(deltas, return_counts=True)
+    _, vcounts = np.unique(vbits, return_counts=True)
+    # Distribution features alone cannot tell e.g. values {4,-1} from
+    # {8,-2}; a content checksum keeps cache keys discriminating.
+    mix = np.uint64(0x9E3779B97F4A7C15)
+    checksum = int((deltas * mix + np.uint64(1)).sum()
+                   ^ (vbits * mix + np.uint64(3)).sum())
+
+    d_bits, d_esc = codeable_bits(dcounts, params, esc_raw_bits=32)
+    v_bits, v_esc = codeable_bits(vcounts, params,
+                                  esc_raw_bits=esc_raw_value)
+    # Shared-table mode merges both domains into one distribution. The
+    # sample halves are equal-weight, matching the 1:1 (delta, value)
+    # interleave of `encode_matrix`.
+    _, mcounts = np.unique(np.concatenate([deltas, vbits]),
+                           return_counts=True)
+    m_bits, _ = codeable_bits(mcounts, params, esc_raw_bits=esc_raw_value)
+
+    return Fingerprint(
+        rows=m, cols=n, nnz=nnz, value_bytes=vb,
+        row_nnz_mean=mean, row_nnz_cv=cv, row_nnz_max=int(row_nnz.max()),
+        bandwidth=bandwidth, sell_padded_nnz=sell_padded,
+        segment_pad_symbols=seg_pad, n_segments=n_segments,
+        nonempty_rows=nonempty_rows,
+        delta_entropy_bits=entropy_bits(dcounts),
+        value_entropy_bits=entropy_bits(vcounts),
+        distinct_deltas=int(dcounts.size),
+        distinct_values=int(vcounts.size),
+        content_checksum=checksum,
+        delta_stream_bits=d_bits, value_stream_bits=v_bits,
+        merged_stream_bits=m_bits,
+        delta_escape_frac=d_esc, value_escape_frac=v_esc,
+    )

@@ -1,0 +1,198 @@
+"""Candidate search: the `select()` entry point of the autotuner.
+
+``select(csr)`` fingerprints the matrix, enumerates candidate formats
+under the machine cost model, optionally *refines* the top candidates by
+actually constructing them (exact bytes instead of entropy estimates),
+and returns the modeled-argmin `Decision`. Two cache layers make repeat
+calls cheap:
+
+  * a per-process identity memo — a warm ``select`` on the same CSR
+    object is a dict lookup (~1 us; below 1% of one modeled SpMVM pass
+    for serving-scale matrices with >= ~100 MB working sets, and 5-6
+    orders of magnitude below re-running the search — on tiny matrices
+    the modeled pass itself is tens of ns, so amortize there);
+  * the persistent `DecisionCache` keyed by fingerprint hash + machine
+    constants + knobs — a new process serving the same matrix skips the
+    search (paper Fig. 9's per-matrix tuning at microseconds, not
+    AlphaSparse-hours).
+
+The ``budget`` knob bounds the expensive part: 0 = estimates only
+(default, pure fingerprint arithmetic), k > 0 = encode/construct the k
+best candidates for exact sizes before the final argmin.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import weakref
+
+from repro.autotune.cache import DecisionCache, default_cache
+from repro.autotune.cost_model import (DTANS_LANE_WIDTHS, V5E, Candidate,
+                                       MachineModel, candidates,
+                                       model_time, spmv_bytes)
+from repro.autotune.fingerprint import Fingerprint, fingerprint
+from repro.core.params import PAPER, DtansParams
+
+ALL_FORMATS = ("csr", "coo", "sell", "dtans")
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """Outcome of one format selection (JSON round-trippable)."""
+
+    fmt: str
+    lane_width: int | None
+    shared_table: bool | None
+    nbytes: int
+    modeled_time: float
+    exact_size: bool
+    warm: bool
+    machine: str
+    fingerprint_key: str
+    refined: bool
+    # (config_name, nbytes, modeled_time) of the best few candidates,
+    # cheapest first — kept for regret reporting and debugging.
+    leaderboard: tuple = ()
+
+    @property
+    def config_name(self) -> str:
+        if self.fmt != "dtans":
+            return self.fmt
+        from repro.autotune.cost_model import dtans_config_name
+        return dtans_config_name(self.lane_width, self.shared_table)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["leaderboard"] = [list(row) for row in self.leaderboard]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Decision":
+        """Raises ValueError on schema drift (old/foreign cache files);
+        `select` treats that as a cache miss and recomputes."""
+        fields = {f.name for f in dataclasses.fields(cls)}
+        if not fields <= set(d) | {"leaderboard"}:
+            raise ValueError(f"missing decision fields: "
+                             f"{sorted(fields - set(d))}")
+        d = {k: v for k, v in d.items() if k in fields}
+        d["leaderboard"] = tuple(tuple(row) for row in
+                                 d.get("leaderboard", ()))
+        try:
+            return cls(**d)
+        except TypeError as e:
+            raise ValueError(f"bad cached decision: {e}") from e
+
+
+#: id(matrix) -> (weakref-to-matrix, config key, Decision). The weakref
+#: guards against id() reuse after garbage collection.
+_memo: dict = {}
+
+
+def clear_memo() -> None:
+    _memo.clear()
+
+
+def _refine(a, cand: Candidate, fp: Fingerprint, *, warm: bool,
+            machine: MachineModel, params: DtansParams) -> Candidate:
+    """Replace an estimated candidate size with the constructed truth."""
+    if cand.exact_size or cand.fmt != "dtans":
+        return cand
+    from repro.core.csr_dtans import encode_matrix
+    b = encode_matrix(a, params=params, lane_width=cand.lane_width,
+                      shared_table=cand.shared_table).nbytes
+    t = model_time(spmv_bytes(b, fp.cols, fp.rows, fp.value_bytes),
+                   fp.nnz, warm=warm, decode=True, machine=machine)
+    return dataclasses.replace(cand, nbytes=b, modeled_time=t,
+                               exact_size=True)
+
+
+def select(a, *, machine: MachineModel = V5E, warm: bool = True,
+           formats: tuple = ALL_FORMATS, budget: int = 0,
+           params: DtansParams = PAPER,
+           lane_widths: tuple = DTANS_LANE_WIDTHS,
+           cache: DecisionCache | None = None,
+           use_cache: bool = True) -> Decision:
+    """Pick the modeled-fastest format for CSR matrix ``a``.
+
+    Args:
+      a: `repro.sparse.formats.CSR` matrix.
+      machine: chip model of the cost model.
+      warm: model a cache-resident (True) or streaming (False) workload.
+      formats: candidate format families to consider.
+      budget: number of top estimated candidates to construct for exact
+        sizes before the final argmin (0 = fingerprint estimates only).
+      cache: decision cache; ``None`` uses the process default
+        (persistent on disk). Pass ``DecisionCache(path=None)`` for a
+        memory-only cache.
+      use_cache: disable both cache layers (for measurement).
+    """
+    cache = cache if cache is not None else default_cache()
+    # The cache object is part of the memo key: a repeat select with a
+    # *different* cache must consult (and populate) that cache, not
+    # short-circuit on the memo.
+    cfg = (machine, warm, tuple(formats), int(budget),
+           tuple(lane_widths), params, cache)
+    if use_cache:
+        hit = _memo.get(id(a))
+        if hit is not None and hit[0]() is a and hit[1] == cfg:
+            return hit[2]
+
+    fp = fingerprint(a, params=params)
+    pp = params
+    key = "|".join([fp.key(), machine.signature(), f"warm={int(warm)}",
+                    ",".join(formats), f"budget={int(budget)}",
+                    ",".join(str(w) for w in lane_widths),
+                    f"w{pp.w_bits}k{pp.k_bits}l{pp.l}o{pp.o}"
+                    f"f{pp.f}m{pp.m_bits}"])
+    if use_cache:
+        raw = cache.get(key)
+        if raw is not None:
+            try:
+                dec = Decision.from_dict(raw)
+            except ValueError:
+                dec = None          # schema drift -> recompute
+            if dec is not None:
+                _memo[id(a)] = (weakref.ref(a), cfg, dec)
+                return dec
+
+    cands = candidates(fp, machine=machine, warm=warm, params=params,
+                       formats=tuple(formats), lane_widths=lane_widths)
+    refined = False
+    if budget > 0:
+        head = [_refine(a, c, fp, warm=warm, machine=machine,
+                        params=params) for c in cands[:budget]]
+        refined = any(h is not c for h, c in zip(head, cands))
+        cands = sorted(head + cands[budget:], key=lambda c: c.modeled_time)
+
+    best = cands[0]
+    dec = Decision(
+        fmt=best.fmt, lane_width=best.lane_width,
+        shared_table=best.shared_table, nbytes=best.nbytes,
+        modeled_time=best.modeled_time, exact_size=best.exact_size,
+        warm=warm, machine=machine.name, fingerprint_key=fp.key(),
+        refined=refined,
+        leaderboard=tuple((c.config_name, c.nbytes, c.modeled_time)
+                          for c in cands[:5]),
+    )
+    if use_cache:
+        cache.put(key, dec.to_dict())
+        if len(_memo) > 4096:  # drop entries whose matrix was collected
+            for k in [k for k, v in _memo.items() if v[0]() is None]:
+                del _memo[k]
+        _memo[id(a)] = (weakref.ref(a), cfg, dec)
+    return dec
+
+
+def choose_dtans_config(a, *, machine: MachineModel = V5E,
+                        warm: bool = True, budget: int = 0,
+                        params: DtansParams = PAPER,
+                        cache: DecisionCache | None = None,
+                        use_cache: bool = True) -> Decision:
+    """Best CSR-dtANS configuration (lane width x table sharing) only.
+
+    Used by `repro.serving.sparse_linear.SparseLinear`'s ``auto=True``
+    path, where the format family is fixed but the knobs are not.
+    """
+    return select(a, machine=machine, warm=warm, formats=("dtans",),
+                  budget=budget, params=params, cache=cache,
+                  use_cache=use_cache)

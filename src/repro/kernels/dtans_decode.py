@@ -41,8 +41,9 @@ def _decode_kernel(stream_ref, esc_ref, ns_ref, nnz_ref, sym_ref, dig_ref,
         vals = bits_to_value(vbits, out_dtype)
         cols_blk = jnp.where(valid, cols, -1).astype(jnp.int32).T  # (L, h)
         vals_blk = jnp.where(valid, vals, 0).T
-        pl.store(cols_ref, (0, slice(None), pl.dslice(j * h, h)), cols_blk)
-        pl.store(vals_ref, (0, slice(None), pl.dslice(j * h, h)), vals_blk)
+        idx = (pl.dslice(0, 1), slice(None), pl.dslice(j * h, h))
+        pl.store(cols_ref, idx, cols_blk[None])
+        pl.store(vals_ref, idx, vals_blk[None])
         return state
 
     jax.lax.fori_loop(0, max_nseg, body, state)

@@ -67,6 +67,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         # XLA's cost_analysis() counts while-loop bodies once (verified in
         # tests/test_roofline.py); use the trip-count-aware walker instead.
         xla_costs = compiled.cost_analysis()
+        if isinstance(xla_costs, (list, tuple)):  # newer jax: one per module
+            xla_costs = xla_costs[0] if xla_costs else {}
         hlo_text = compiled.as_text()
         if save_hlo and out_dir:
             import gzip

@@ -34,21 +34,43 @@ class SparseLinear:
     d_out: int
     dense_bytes: int
     baseline_bytes: int      # best of CSR/COO/SELL on the pruned matrix
+    decision: object = None  # autotune Decision when built with auto=True
 
     @classmethod
     def from_dense(cls, w: np.ndarray, sparsity: float = 0.8,
                    value_bits: int = 8, lane_width: int = 128,
-                   shared_table: bool = True) -> "SparseLinear":
+                   shared_table: bool = True, auto: bool = False,
+                   autotune_budget: int = 0,
+                   autotune_cache=None) -> "SparseLinear":
+        """Compress a dense projection for decode-on-the-fly serving.
+
+        With ``auto=True`` the ``lane_width`` / ``shared_table`` knobs are
+        ignored and chosen per matrix by `repro.autotune` (fingerprint the
+        pruned weight, pick the modeled-fastest CSR-dtANS configuration;
+        decisions persist in the autotune cache, so repeated serving runs
+        skip the search). ``autotune_budget`` > 0 additionally encodes the
+        top candidates to refine estimated sizes into exact ones;
+        ``autotune_cache`` overrides the default persistent cache (pass
+        ``repro.autotune.DecisionCache(path=None)`` for memory-only).
+        """
         d_in, d_out = w.shape
         pruned = magnitude_prune(np.asarray(w, dtype=np.float32).T,
                                  sparsity)
         pruned = codebook_quantize(pruned, bits=value_bits)
+        decision = None
+        if auto:
+            from repro.autotune import choose_dtans_config
+            decision = choose_dtans_config(pruned, warm=True,
+                                           budget=autotune_budget,
+                                           cache=autotune_cache)
+            lane_width = decision.lane_width
+            shared_table = decision.shared_table
         mat = encode_matrix(pruned, lane_width=lane_width,
                             shared_table=shared_table)
         _, bb = best_baseline_nbytes(pruned)
         return cls(mat=mat, packed=pack_matrix(mat), d_in=d_in,
                    d_out=d_out, dense_bytes=w.size * w.dtype.itemsize,
-                   baseline_bytes=bb)
+                   baseline_bytes=bb, decision=decision)
 
     @property
     def compressed_bytes(self) -> int:

@@ -1,0 +1,49 @@
+"""Optional-`hypothesis` shim for the test suite.
+
+`hypothesis` is a dev-only dependency (requirements-dev.txt). When it is
+missing, the property-based tests must *skip* instead of breaking
+collection of the whole module. Importing from this module gives either
+the real `given`/`settings`/`st`, or stand-ins whose decorated tests call
+``pytest.importorskip("hypothesis")`` at run time and therefore report as
+skipped.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised when hypothesis absent
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Accepts any `st.<name>(...)` call at decoration time."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        if args and callable(args[0]) and not kwargs:
+            return args[0]
+        return lambda f: f
+
+    def given(*args, **kwargs):
+        def deco(f):
+            # *args signature on purpose: pytest must not see the
+            # hypothesis-provided parameters (`data=`, `seed=`, ...) and
+            # go looking for fixtures with those names.
+            def skipped(*a, **k):
+                pytest.importorskip("hypothesis")
+
+            skipped.__name__ = f.__name__
+            skipped.__doc__ = f.__doc__
+            return skipped
+
+        return deco
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

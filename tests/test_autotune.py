@@ -1,0 +1,280 @@
+"""Tests for repro.autotune: fingerprint determinism, cost-model
+monotonicity, cache round-trips, and selector-vs-oracle agreement on a
+synthetic suite (paper Fig. 9's selection question)."""
+
+import numpy as np
+import pytest
+
+from repro.autotune import (DecisionCache, V5E, candidates,
+                            choose_dtans_config, clear_memo,
+                            dtans_config_name, dtans_nbytes_estimate,
+                            fingerprint, model_time, select, spmv_bytes)
+from repro.autotune.cost_model import (DTANS_LANE_WIDTHS,
+                                       DTANS_SHARED_TABLE, coo_nbytes,
+                                       csr_nbytes, sell_nbytes)
+from repro.autotune.search import Decision
+from repro.core.csr_dtans import encode_matrix
+from repro.sparse.formats import COO, CSR, SELL
+from repro.sparse.prune import codebook_quantize, magnitude_prune
+from repro.sparse.random_graphs import (banded, barabasi_albert,
+                                        erdos_renyi, stencil_2d,
+                                        watts_strogatz)
+
+
+def _f32(a: CSR) -> CSR:
+    return CSR(a.indptr, a.indices, a.values.astype(np.float32), a.shape)
+
+
+def _mini_suite() -> dict:
+    rng = np.random.default_rng(7)
+    w = (rng.standard_normal((512, 512)) / 22).astype(np.float32)
+    nn = codebook_quantize(magnitude_prune(w, 0.85), bits=8)
+    er = erdos_renyi(1200, 9, rng)
+    rand_vals = CSR(er.indptr, er.indices,
+                    rng.standard_normal(er.nnz), er.shape)
+    return {
+        "stencil": stencil_2d(40),
+        "banded": banded(2500, 6),
+        "er": erdos_renyi(1500, 10, rng),
+        "er_dense": erdos_renyi(700, 25, rng),
+        "ws": watts_strogatz(1500, 5, 0.1, rng),
+        "ba": barabasi_albert(1500, 8, rng),
+        "nn": nn,
+        "rand_vals": rand_vals,
+        "tiny": erdos_renyi(120, 5, rng),
+        "single_row": CSR.from_dense(
+            np.concatenate([np.ones((1, 300)),
+                            np.zeros((59, 300))]).astype(np.float64)),
+    }
+
+
+class TestFingerprint:
+    def test_deterministic(self):
+        a = _f32(stencil_2d(30))
+        fp1, fp2 = fingerprint(a), fingerprint(a)
+        assert fp1 == fp2
+        assert fp1.key() == fp2.key()
+
+    def test_distinct_matrices_distinct_keys(self):
+        rng = np.random.default_rng(0)
+        keys = {fingerprint(a if a.values.dtype == np.float64 else a).key()
+                for a in (stencil_2d(30), banded(900, 4),
+                          erdos_renyi(900, 6, rng))}
+        assert len(keys) == 3
+
+    def test_value_change_changes_key(self):
+        a = stencil_2d(20)
+        b = CSR(a.indptr, a.indices, a.values * 2.0, a.shape)
+        assert fingerprint(a).key() != fingerprint(b).key()
+
+    def test_features_exact(self):
+        a = _f32(banded(600, 5))
+        fp = fingerprint(a)
+        assert fp.nnz == a.nnz
+        assert (fp.rows, fp.cols) == a.shape
+        assert fp.row_nnz_max == int(a.row_nnz().max())
+        assert fp.sell_padded_nnz == SELL.from_csr(a).indices.size
+
+    def test_empty_matrix(self):
+        a = CSR.from_dense(np.zeros((8, 9)))
+        fp = fingerprint(a)
+        assert fp.nnz == 0 and fp.key()
+
+
+class TestCostModel:
+    def test_more_bytes_more_time(self):
+        """Monotonicity: modeled time never decreases with bytes."""
+        for warm in (True, False):
+            times = [model_time(b, 10_000, warm=warm, decode=False)
+                     for b in np.linspace(1e4, 1e9, 50)]
+            assert all(t2 >= t1 for t1, t2 in zip(times, times[1:]))
+
+    def test_decode_term_additive(self):
+        t0 = model_time(10**6, 10**5, warm=True, decode=False)
+        t1 = model_time(10**6, 10**5, warm=True, decode=True)
+        assert t1 == pytest.approx(
+            t0 + 10**5 * V5E.decode_ops_per_nnz / V5E.vpu_rate)
+
+    def test_baseline_sizes_exact(self):
+        a = _f32(watts_strogatz(800, 4, 0.05, np.random.default_rng(3)))
+        fp = fingerprint(a)
+        assert csr_nbytes(fp) == a.nbytes
+        assert coo_nbytes(fp) == COO.from_csr(a).nbytes
+        assert sell_nbytes(fp) == SELL.from_csr(a).nbytes
+
+    @pytest.mark.parametrize("lane_width", DTANS_LANE_WIDTHS)
+    @pytest.mark.parametrize("shared", DTANS_SHARED_TABLE)
+    def test_dtans_estimate_close(self, lane_width, shared):
+        a = _f32(erdos_renyi(900, 8, np.random.default_rng(4)))
+        est = dtans_nbytes_estimate(fingerprint(a), lane_width=lane_width,
+                                    shared_table=shared)
+        act = encode_matrix(a, lane_width=lane_width,
+                            shared_table=shared).nbytes
+        assert abs(est - act) / act < 0.15
+
+    def test_candidates_sorted(self):
+        fp = fingerprint(_f32(stencil_2d(25)))
+        cands = candidates(fp)
+        times = [c.modeled_time for c in cands]
+        assert times == sorted(times)
+        assert {c.fmt for c in cands} == {"csr", "coo", "sell", "dtans"}
+
+
+class TestCache:
+    def test_memory_roundtrip(self):
+        c = DecisionCache(path=None)
+        c.put("k", {"fmt": "csr"})
+        assert c.get("k") == {"fmt": "csr"}
+        assert "k" in c and len(c) == 1
+
+    def test_disk_roundtrip(self, tmp_path):
+        p = tmp_path / "sub" / "autotune.json"
+        c = DecisionCache(path=p)
+        c.put("k1", {"fmt": "sell", "nbytes": 10})
+        del c
+        c2 = DecisionCache(path=p)
+        assert c2.get("k1") == {"fmt": "sell", "nbytes": 10}
+
+    def test_corrupt_file_is_empty_cache(self, tmp_path):
+        p = tmp_path / "bad.json"
+        p.write_text("{not json")
+        c = DecisionCache(path=p)
+        assert c.get("x") is None
+        c.put("x", {"a": 1})        # and it heals on write
+        assert DecisionCache(path=p).get("x") == {"a": 1}
+
+    def test_unwritable_path_degrades_to_memory(self, tmp_path):
+        ro = tmp_path / "ro"
+        ro.mkdir()
+        ro.chmod(0o500)
+        c = DecisionCache(path=ro / "sub" / "c.json")
+        c.put("k", {"fmt": "csr"})       # must not raise
+        assert c.get("k") == {"fmt": "csr"}
+        ro.chmod(0o700)
+
+    def test_select_hits_disk_cache(self, tmp_path):
+        a = _f32(erdos_renyi(500, 6, np.random.default_rng(5)))
+        cache = DecisionCache(path=tmp_path / "c.json")
+        clear_memo()
+        d1 = select(a, cache=cache)
+        assert len(cache) == 1
+        clear_memo()                     # force the disk path
+        d2 = select(a, cache=cache)
+        assert d2 == d1
+        assert isinstance(d2, Decision)
+
+    def test_machine_constants_in_cache_key(self):
+        """A recalibrated MachineModel must not hit stale decisions."""
+        a = _f32(erdos_renyi(400, 6, np.random.default_rng(9)))
+        cache = DecisionCache(path=None)
+        clear_memo()
+        d1 = select(a, cache=cache)
+        slow = V5E.__class__(hbm_bw=V5E.hbm_bw / 100,
+                             cache_bw=V5E.cache_bw / 100)  # name still "v5e"
+        d2 = select(a, machine=slow, cache=cache)
+        assert len(cache) == 2                    # distinct keys
+        assert d2.modeled_time != d1.modeled_time
+
+    def test_memo_does_not_shadow_new_cache(self):
+        a = _f32(banded(300, 3))
+        clear_memo()
+        c1, c2 = DecisionCache(path=None), DecisionCache(path=None)
+        select(a, cache=c1)
+        select(a, cache=c2)
+        assert len(c1) == 1 and len(c2) == 1
+
+    def test_schema_drift_is_cache_miss(self):
+        a = _f32(banded(300, 3))
+        cache = DecisionCache(path=None)
+        clear_memo()
+        d1 = select(a, cache=cache)
+        key = next(iter(cache._load()))
+        cache.put(key, {"fmt": "csr", "bogus_old_field": 1})  # stale schema
+        clear_memo()
+        assert select(a, cache=cache) == d1       # recomputed, not crash
+
+    def test_decision_dict_roundtrip(self):
+        a = _f32(banded(400, 4))
+        d = select(a, cache=DecisionCache(path=None), use_cache=True)
+        assert Decision.from_dict(d.to_dict()) == d
+
+
+class TestSelector:
+    def _oracle(self, a: CSR, warm: bool) -> tuple[str, float]:
+        """Exact-size modeled argmin over every candidate config."""
+        m, n = a.shape
+        vb = a.values.dtype.itemsize
+        times = {}
+        for fmt, b in (("csr", a.nbytes), ("coo", COO.from_csr(a).nbytes),
+                       ("sell", SELL.from_csr(a).nbytes)):
+            times[fmt] = model_time(spmv_bytes(b, n, m, vb), a.nnz,
+                                    warm=warm, decode=False)
+        for w in DTANS_LANE_WIDTHS:
+            for shared in DTANS_SHARED_TABLE:
+                b = encode_matrix(a, lane_width=w,
+                                  shared_table=shared).nbytes
+                times[dtans_config_name(w, shared)] = model_time(
+                    spmv_bytes(b, n, m, vb), a.nnz, warm=warm,
+                    decode=True)
+        best = min(times, key=times.get)
+        return best, times
+
+    @pytest.mark.parametrize("warm", [True, False], ids=["warm", "cold"])
+    def test_selector_matches_modeled_argmin(self, warm):
+        """>= 90% agreement with the exact oracle, tiny regret elsewhere
+        (the ISSUE's acceptance bar, on the mini synthetic suite)."""
+        cache = DecisionCache(path=None)
+        agree, total, regrets = 0, 0, []
+        for name, a64 in _mini_suite().items():
+            a = _f32(a64)
+            dec = select(a, warm=warm, cache=cache)
+            best, times = self._oracle(a, warm)
+            t_pick = times[dec.config_name]
+            regrets.append(t_pick / times[best] - 1.0)
+            agree += dec.config_name == best
+            total += 1
+        assert agree / total >= 0.9, f"agreement {agree}/{total}"
+        assert max(regrets) < 0.1, f"max regret {max(regrets):.3f}"
+
+    def test_refinement_budget_gives_exact_sizes(self):
+        a = _f32(erdos_renyi(600, 7, np.random.default_rng(6)))
+        cache = DecisionCache(path=None)
+        dec = select(a, formats=("dtans",), budget=4, cache=cache)
+        act = encode_matrix(a, lane_width=dec.lane_width,
+                            shared_table=dec.shared_table).nbytes
+        assert dec.exact_size and dec.nbytes == act
+
+    def test_choose_dtans_config(self):
+        a = _f32(banded(800, 6))
+        dec = choose_dtans_config(a, cache=DecisionCache(path=None))
+        assert dec.fmt == "dtans"
+        assert dec.lane_width in DTANS_LANE_WIDTHS
+
+    def test_memo_hit_is_fast_and_identical(self):
+        import time
+        a = _f32(stencil_2d(30))
+        cache = DecisionCache(path=None)
+        clear_memo()
+        d1 = select(a, cache=cache)
+        t0 = time.perf_counter()
+        for _ in range(100):
+            d2 = select(a, cache=cache)
+        per_call = (time.perf_counter() - t0) / 100
+        assert d2 is d1
+        assert per_call < 1e-3     # microseconds, not a re-search
+
+
+class TestServingIntegration:
+    def test_sparse_linear_auto(self):
+        rng = np.random.default_rng(8)
+        w = (rng.standard_normal((128, 320)) / 12).astype(np.float32)
+        from repro.serving.sparse_linear import SparseLinear
+        sl = SparseLinear.from_dense(w, sparsity=0.8, auto=True,
+                                     autotune_cache=DecisionCache(path=None))
+        assert sl.decision is not None
+        assert sl.decision.fmt == "dtans"
+        assert sl.mat.lane_width == sl.decision.lane_width
+        x = rng.standard_normal((2, 128)).astype(np.float32)
+        got = np.asarray(sl.apply(x))
+        want = np.asarray(sl.apply_dense_reference(x))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.csr_dtans import decode_matrix, encode_matrix, spmv_gold
 from repro.sparse.formats import CSR, COO, SELL, best_baseline_nbytes

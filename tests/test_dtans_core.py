@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.dtans import decode_scalar, encode_scalar, encoded_bits
 from repro.core.dtans_vec import (StackedTables, decode_lanes,

@@ -1,0 +1,132 @@
+"""MatrixMarket loader tests (repro.sparse.io)."""
+
+import gzip
+import io
+
+import numpy as np
+import pytest
+
+from repro.sparse.formats import CSR
+from repro.sparse.io import load_mtx, save_mtx
+from repro.sparse.random_graphs import banded, stencil_2d
+
+
+def _same(a: CSR, b: CSR, tol=0.0):
+    assert a.shape == b.shape
+    assert np.array_equal(a.indptr, b.indptr)
+    assert np.array_equal(a.indices, b.indices)
+    if tol:
+        np.testing.assert_allclose(a.values, b.values, rtol=tol)
+    else:
+        assert np.array_equal(a.values, b.values)
+
+
+class TestRoundtrip:
+    def test_file_roundtrip(self, tmp_path):
+        a = banded(200, 5)
+        p = tmp_path / "banded.mtx"
+        save_mtx(p, a)
+        _same(a, load_mtx(p))
+
+    def test_gzip_roundtrip(self, tmp_path):
+        a = stencil_2d(12)
+        p = tmp_path / "stencil.mtx.gz"
+        save_mtx(p, a)
+        _same(a, load_mtx(p))
+
+    def test_stringio_roundtrip(self):
+        rng = np.random.default_rng(0)
+        d = rng.standard_normal((13, 17))
+        d[rng.random(d.shape) < 0.8] = 0
+        a = CSR.from_dense(d)
+        buf = io.StringIO()
+        save_mtx(buf, a, comment="test matrix\nsecond line")
+        buf.seek(0)
+        _same(a, load_mtx(buf))
+
+    def test_empty_rows_and_shape_preserved(self):
+        d = np.zeros((9, 4))
+        d[0, 1] = 2.5
+        d[8, 0] = -1.0
+        a = CSR.from_dense(d)
+        buf = io.StringIO()
+        save_mtx(buf, a)
+        buf.seek(0)
+        b = load_mtx(buf)
+        _same(a, b)
+        assert b.shape == (9, 4)
+
+
+class TestFields:
+    def test_pattern(self):
+        txt = ("%%MatrixMarket matrix coordinate pattern general\n"
+               "% comment\n3 4 3\n1 1\n2 3\n3 4\n")
+        a = load_mtx(io.StringIO(txt))
+        assert a.shape == (3, 4) and a.nnz == 3
+        assert (a.values == 1.0).all()
+        assert a.to_dense()[1, 2] == 1.0
+
+    def test_integer(self):
+        txt = ("%%MatrixMarket matrix coordinate integer general\n"
+               "2 2 2\n1 1 7\n2 2 -3\n")
+        a = load_mtx(io.StringIO(txt))
+        assert a.to_dense()[0, 0] == 7.0
+        assert a.to_dense()[1, 1] == -3.0
+
+    def test_symmetric_expands(self):
+        txt = ("%%MatrixMarket matrix coordinate real symmetric\n"
+               "3 3 3\n1 1 2.0\n2 1 5.0\n3 2 -1.0\n")
+        d = load_mtx(io.StringIO(txt)).to_dense()
+        assert d[0, 1] == d[1, 0] == 5.0
+        assert d[1, 2] == d[2, 1] == -1.0
+        assert d[0, 0] == 2.0
+
+    def test_skew_symmetric(self):
+        txt = ("%%MatrixMarket matrix coordinate real skew-symmetric\n"
+               "2 2 1\n2 1 4.0\n")
+        d = load_mtx(io.StringIO(txt)).to_dense()
+        assert d[1, 0] == 4.0 and d[0, 1] == -4.0
+
+    def test_array_general(self):
+        # column-major body of [[1, 3], [2, 4]]
+        txt = ("%%MatrixMarket matrix array real general\n"
+               "2 2\n1\n2\n3\n4\n")
+        d = load_mtx(io.StringIO(txt)).to_dense()
+        np.testing.assert_array_equal(d, [[1.0, 3.0], [2.0, 4.0]])
+
+    def test_zero_nnz(self):
+        txt = "%%MatrixMarket matrix coordinate real general\n4 5 0\n"
+        a = load_mtx(io.StringIO(txt))
+        assert a.shape == (4, 5) and a.nnz == 0
+
+
+class TestErrors:
+    @pytest.mark.parametrize("header", [
+        "not a banner at all\n1 1 0\n",
+        "%%MatrixMarket matrix coordinate complex general\n1 1 0\n",
+        "%%MatrixMarket matrix coordinate real hermitian\n1 1 0\n",
+        "%%MatrixMarket tensor coordinate real general\n1 1 0\n",
+    ])
+    def test_bad_headers(self, header):
+        with pytest.raises(ValueError):
+            load_mtx(io.StringIO(header))
+
+    def test_out_of_range_index(self):
+        txt = ("%%MatrixMarket matrix coordinate real general\n"
+               "2 2 1\n3 1 1.0\n")
+        with pytest.raises(ValueError):
+            load_mtx(io.StringIO(txt))
+
+    def test_values_precision_roundtrip(self):
+        a = CSR.from_dense(np.array([[np.pi, 0.0], [0.0, 1e-300]]))
+        buf = io.StringIO()
+        save_mtx(buf, a)
+        buf.seek(0)
+        _same(a, load_mtx(buf))  # %.17g is bit-exact for float64
+
+    def test_gzipped_bytes_header(self, tmp_path):
+        p = tmp_path / "x.mtx.gz"
+        with gzip.open(p, "wt") as f:
+            f.write("%%MatrixMarket matrix coordinate real general\n"
+                    "1 1 1\n1 1 9.0\n")
+        assert load_mtx(p).to_dense()[0, 0] == 9.0
