@@ -20,6 +20,10 @@ def main() -> None:
     ap.add_argument("--small", action="store_true",
                     help="trimmed sizes (CI)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the rows as a JSON list of "
+                         "{name, us_per_call, derived} objects (CI "
+                         "artifact)")
     args, _ = ap.parse_known_args()
 
     from benchmarks import (bench_compression, bench_delta_entropy,
@@ -34,11 +38,17 @@ def main() -> None:
                                        measure=False),
         "fig9": lambda: bench_format_selection.run(small=args.small),
     }
+    collected = []
     for name, fn in sections.items():
         if args.only and args.only != name:
             continue
         for row in fn():
+            collected.append(row)
             print(",".join(str(x) for x in row), flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([{"name": r[0], "us_per_call": r[1],
+                        "derived": r[2]} for r in collected], f, indent=1)
 
     # roofline summary from dry-run artifacts, if present
     ddir = os.path.join(os.path.dirname(__file__), "..",

@@ -16,23 +16,36 @@ a persistent cache (`cache.DecisionCache`).
 from repro.autotune.cache import (DecisionCache, default_cache,
                                   default_cache_path)
 from repro.autotune.cost_model import (DTANS_LANE_WIDTHS, V5E, Candidate,
-                                       MachineModel, candidates,
-                                       coo_nbytes, csr_nbytes,
+                                       MachineModel, candidate_time,
+                                       candidates, coo_nbytes, csr_nbytes,
                                        dtans_config_name,
-                                       dtans_nbytes_estimate, model_time,
-                                       sell_nbytes, spmv_bytes)
+                                       dtans_nbytes_estimate,
+                                       format_ops_per_elem, model_time,
+                                       rgcsr_config_name,
+                                       rgcsr_dtans_config_name,
+                                       rgcsr_dtans_nbytes_estimate,
+                                       rgcsr_nbytes, sell_nbytes,
+                                       spmv_bytes, spmv_time)
 from repro.autotune.fingerprint import (Fingerprint, codeable_bits,
-                                        fingerprint)
+                                        fingerprint, lockstep_elems,
+                                        max_group_nnz)
+from repro.autotune.oracle import oracle_best, oracle_times
 from repro.autotune.search import (ALL_FORMATS, Decision,
                                    choose_dtans_config, clear_memo,
                                    select)
+from repro.sparse.rgcsr import RGCSR_GROUP_SIZES
 
 __all__ = [
     "ALL_FORMATS", "Candidate", "Decision", "DecisionCache",
-    "DTANS_LANE_WIDTHS", "Fingerprint", "MachineModel", "V5E",
-    "candidates", "choose_dtans_config", "clear_memo", "codeable_bits",
+    "DTANS_LANE_WIDTHS", "Fingerprint", "MachineModel",
+    "RGCSR_GROUP_SIZES", "V5E",
+    "candidate_time", "candidates", "choose_dtans_config", "clear_memo",
+    "codeable_bits",
     "coo_nbytes", "csr_nbytes", "default_cache", "default_cache_path",
     "dtans_config_name",
-    "dtans_nbytes_estimate", "fingerprint", "model_time", "select",
-    "sell_nbytes", "spmv_bytes",
+    "dtans_nbytes_estimate", "fingerprint", "format_ops_per_elem",
+    "lockstep_elems", "max_group_nnz", "model_time", "oracle_best",
+    "oracle_times", "rgcsr_config_name", "rgcsr_dtans_config_name",
+    "rgcsr_dtans_nbytes_estimate", "rgcsr_nbytes", "select",
+    "sell_nbytes", "spmv_bytes", "spmv_time",
 ]

@@ -2,25 +2,42 @@
 
 This is the library home of the performance model that previously lived
 in ``benchmarks/suite.py``: SpMVM is memory-bound, so the runtime of a
-format is two-level memory time plus (for entropy-coded formats) a
-decode-compute term:
+format is two-level memory time plus a compute term:
 
-    t = miss_bytes / hbm_bw + hit_bytes / cache_bw + ops / vpu_rate
+    t = miss_bytes / hbm_bw + hit_bytes / cache_bw + work / vpu_rate
 
 with ``hit_bytes = min(bytes, cache_bytes)`` for a warm cache (the
 paper's 96 MB GPU L2 has the v5e CMEM/VMEM-resident working set as its
-analogue) and 0 for a cold one. CSR-dtANS adds ``decode_ops_per_nnz``
-vector ops per nonzero (segment unpack + table gathers + limb update,
-counted from ``kernels/common.py``). This mirrors the paper's
-observation that warm caches shift the bottleneck from bytes to decode
-throughput (Section V-B vs V-C), and is the predictor behind the
-paper-Fig. 9 format-selection question that `repro.autotune.select`
-answers per matrix.
+analogue) and 0 for a cold one.
 
-Byte counts for CSR/COO/SELL are *exact* given a fingerprint; CSR-dtANS
-bytes are estimated from the fingerprint's escape-aware entropy features
-(see `fingerprint.codeable_bits`) and can be refined by actually
-encoding (``search.select(budget=...)``).
+The compute term distinguishes *how* each format's kernel walks the
+matrix (``work = work_elems * ops_per_elem``):
+
+* **lock-step formats** (SELL, RGCSR, the dtANS family) process slices
+  of ``width`` rows to the longest row in the slice, so their
+  ``work_elems`` is `fingerprint.lockstep_elems` — stored *plus padded*
+  element slots. SELL additionally pays that padding in bytes; RGCSR and
+  RGCSR-dtANS store compactly and pay it only here, which is exactly the
+  padding-waste vs slice-alignment trade the selector arbitrates.
+* **row-sequential formats** (CSR, COO) touch only real nonzeros but
+  cannot fill the vector unit with irregular rows; they are charged
+  ``row_seq_penalty`` ops per element (sublane utilization, the reason
+  GPU SpMV abandons plain CSR).
+* **entropy-coded formats** add ``decode_ops_per_nnz`` vector ops per
+  processed element (segment unpack + table gathers + limb update,
+  counted from ``kernels/common.py``) — the paper's observation that
+  warm caches shift the bottleneck from bytes to decode throughput
+  (Section V-B vs V-C). This is the predictor behind the paper-Fig. 9
+  format-selection question that `repro.autotune.select` answers per
+  matrix.
+
+Byte counts for CSR/COO/SELL/RGCSR are *exact* given a fingerprint;
+dtANS-family bytes are estimated from the fingerprint's escape-aware
+entropy features (see `fingerprint.codeable_bits`) and can be refined by
+actually encoding (``search.select(budget=...)``).
+
+(`model_time` keeps the original two-term + decode-flag form for the
+paper-figure benchmarks, Figs. 7/8; the selector path uses `spmv_time`.)
 """
 
 from __future__ import annotations
@@ -30,6 +47,7 @@ import math
 
 from repro.autotune.fingerprint import Fingerprint
 from repro.core.params import PAPER, DtansParams
+from repro.sparse.rgcsr import RGCSR_GROUP_SIZES, local_indptr_bytes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,13 +60,16 @@ class MachineModel:
     cache_bytes: float = 96e6        # paper's L2 size, for comparability
     vpu_rate: float = 1.9e12         # vector ops/s (8x128 x 2 ALUs)
     decode_ops_per_nnz: float = 16   # unpack + 2 gathers + limb ops
+    spmv_ops_per_elem: float = 1     # madd+gather per lock-step element
+    row_seq_penalty: float = 8       # CSR/COO sublane utilization factor
 
     def signature(self) -> str:
         """Cache-key component: the *constants*, not just the name, so
         recalibrating a model never serves stale cached decisions."""
         return (f"{self.name}:{self.hbm_bw:g}:{self.cache_bw:g}:"
                 f"{self.cache_bytes:g}:{self.vpu_rate:g}:"
-                f"{self.decode_ops_per_nnz:g}")
+                f"{self.decode_ops_per_nnz:g}:{self.spmv_ops_per_elem:g}:"
+                f"{self.row_seq_penalty:g}")
 
 
 def dtans_config_name(lane_width: int, shared_table: bool) -> str:
@@ -60,6 +81,18 @@ def dtans_config_name(lane_width: int, shared_table: bool) -> str:
     """
     tables = "shared" if shared_table else "split"
     return f"dtans[w={lane_width},{tables}]"
+
+
+def rgcsr_config_name(group_size: int) -> str:
+    """Canonical name of one plain-RGCSR configuration."""
+    return f"rgcsr[G={group_size}]"
+
+
+def rgcsr_dtans_config_name(group_size: int,
+                            shared_table: bool = True) -> str:
+    """Canonical name of one RGCSR-dtANS configuration."""
+    tables = "shared" if shared_table else "split"
+    return f"rgcsr_dtans[G={group_size},{tables}]"
 
 
 #: Default chip model (TPU v5e), numerically identical to the constants
@@ -79,7 +112,12 @@ def spmv_bytes(fmt_bytes: int, n: int, m: int, vbytes: int) -> int:
 
 def model_time(bytes_moved: int, nnz: int, *, warm: bool, decode: bool,
                machine: MachineModel = V5E) -> float:
-    """Modeled seconds of one SpMVM pass."""
+    """Modeled seconds of one SpMVM pass (legacy two-term form).
+
+    Kept verbatim for the paper-figure benchmarks (Figs. 7/8 compare a
+    fixed CSR-dtANS against byte-count baselines under the paper's own
+    model). The selector uses `spmv_time`, which also charges the
+    per-format kernel work."""
     hit = min(bytes_moved, machine.cache_bytes) if warm else 0.0
     miss = bytes_moved - hit
     t = miss / machine.hbm_bw + hit / machine.cache_bw
@@ -88,22 +126,85 @@ def model_time(bytes_moved: int, nnz: int, *, warm: bool, decode: bool,
     return t
 
 
+#: Lock-step formats (work_elems from `Fingerprint.lockstep`); the rest
+#: of the known formats are row-sequential.
+LOCKSTEP_FORMATS = ("sell", "rgcsr", "dtans", "rgcsr_dtans")
+DECODE_FORMATS = ("dtans", "rgcsr_dtans")
+KNOWN_FORMATS = ("csr", "coo", "sell", "rgcsr", "dtans", "rgcsr_dtans")
+
+
+def format_ops_per_elem(fmt: str, machine: MachineModel = V5E) -> float:
+    """Vector ops one kernel spends per processed element slot."""
+    if fmt in ("csr", "coo"):
+        return machine.spmv_ops_per_elem * machine.row_seq_penalty
+    if fmt in ("sell", "rgcsr"):
+        return machine.spmv_ops_per_elem
+    if fmt in DECODE_FORMATS:
+        return machine.spmv_ops_per_elem + machine.decode_ops_per_nnz
+    raise ValueError(f"unknown format {fmt!r}")
+
+
+def spmv_time(nbytes: int, work_elems: float, ops_per_elem: float, *,
+              rows: int, cols: int, vbytes: int, warm: bool,
+              machine: MachineModel = V5E) -> float:
+    """Modeled seconds of one SpMVM pass (selector model: memory time
+    plus per-format kernel work)."""
+    bytes_moved = spmv_bytes(nbytes, cols, rows, vbytes)
+    hit = min(bytes_moved, machine.cache_bytes) if warm else 0.0
+    miss = bytes_moved - hit
+    return (miss / machine.hbm_bw + hit / machine.cache_bw
+            + work_elems * ops_per_elem / machine.vpu_rate)
+
+
+def candidate_time(fp: Fingerprint, fmt: str, nbytes: int, *, warm: bool,
+                   machine: MachineModel = V5E,
+                   lane_width: int | None = None,
+                   group_size: int | None = None) -> float:
+    """`spmv_time` of one (format, config) from fingerprint features.
+
+    The single formula shared by `candidates`, `search._refine` and the
+    exhaustive oracle (`repro.autotune.oracle`) — selector and oracle
+    cannot drift apart.
+    """
+    if fmt in ("csr", "coo"):
+        work = fp.nnz
+    elif fmt == "sell":
+        work = fp.sell_padded_nnz
+    elif fmt == "rgcsr":
+        work = fp.lockstep(group_size)
+    elif fmt == "dtans":
+        work = fp.lockstep(lane_width)
+    elif fmt == "rgcsr_dtans":
+        work = fp.lockstep(group_size)
+    else:
+        raise ValueError(f"unknown format {fmt!r}")
+    return spmv_time(nbytes, work, format_ops_per_elem(fmt, machine),
+                     rows=fp.rows, cols=fp.cols, vbytes=fp.value_bytes,
+                     warm=warm, machine=machine)
+
+
 @dataclasses.dataclass(frozen=True)
 class Candidate:
     """One (format, config) point with its size and modeled runtime."""
 
-    fmt: str                      # "csr" | "coo" | "sell" | "dtans"
+    fmt: str                      # one of KNOWN_FORMATS
     nbytes: int                   # format bytes (estimated or exact)
     modeled_time: float           # seconds per SpMVM pass
     exact_size: bool              # True when nbytes is not an estimate
-    lane_width: int | None = None      # dtans only
-    shared_table: bool | None = None   # dtans only
+    lane_width: int | None = None      # dtans family only
+    shared_table: bool | None = None   # dtans family only
+    group_size: int | None = None      # rgcsr family only
 
     @property
     def config_name(self) -> str:
-        if self.fmt != "dtans":
-            return self.fmt
-        return dtans_config_name(self.lane_width, self.shared_table)
+        if self.fmt == "dtans":
+            return dtans_config_name(self.lane_width, self.shared_table)
+        if self.fmt == "rgcsr":
+            return rgcsr_config_name(self.group_size)
+        if self.fmt == "rgcsr_dtans":
+            return rgcsr_dtans_config_name(self.group_size,
+                                           self.shared_table)
+        return self.fmt
 
 
 def csr_nbytes(fp: Fingerprint) -> int:
@@ -119,6 +220,22 @@ def sell_nbytes(fp: Fingerprint) -> int:
     nslices = -(-fp.rows // SELL_SLICE_HEIGHT)
     return (fp.sell_padded_nnz * (4 + fp.value_bytes)
             + (nslices + 1) * 4)
+
+
+def rgcsr_nbytes(fp: Fingerprint, group_size: int) -> int:
+    """`repro.sparse.rgcsr.RGCSR.nbytes` from the fingerprint's row-nnz
+    histogram features (mirrors `rgcsr_nbytes_exact`).
+
+    Exact for group sizes in RGCSR_GROUP_SIZES; for other sizes
+    `Fingerprint.group_max_nnz` falls back to ``nnz`` (conservative:
+    may charge 4-byte local indptr where the real format uses 2), so
+    `candidates` marks those estimated and ``budget`` refinement
+    constructs the truth."""
+    G = int(group_size)
+    ngroups = -(-fp.rows // G) if fp.rows else 0
+    lb = local_indptr_bytes(fp.group_max_nnz(G))
+    return (fp.nnz * (4 + fp.value_bytes) + ngroups * (G + 1) * lb
+            + (ngroups + 1) * 4)
 
 
 def dtans_nbytes_estimate(fp: Fingerprint, *, lane_width: int = 128,
@@ -173,24 +290,46 @@ def dtans_nbytes_estimate(fp: Fingerprint, *, lane_width: int = 128,
     return int(b)
 
 
+def rgcsr_dtans_nbytes_estimate(fp: Fingerprint, *, group_size: int = 32,
+                                shared_table: bool = True,
+                                params: DtansParams = PAPER) -> int:
+    """Estimated `RGCSRdtANS.nbytes`: the CSR-dtANS estimate at interleave
+    width G, with 4-byte per-row lengths replaced by group-local ones
+    (16-bit unless some row reaches 2**16 nonzeros)."""
+    base = dtans_nbytes_estimate(fp, lane_width=group_size,
+                                 shared_table=shared_table, params=params)
+    row_bytes = local_indptr_bytes(fp.row_nnz_max)
+    return base - fp.rows * 4 + fp.rows * row_bytes
+
+
 def candidates(fp: Fingerprint, *, machine: MachineModel = V5E,
                warm: bool = True, params: DtansParams = PAPER,
-               formats: tuple = ("csr", "coo", "sell", "dtans"),
-               lane_widths: tuple = DTANS_LANE_WIDTHS) -> list[Candidate]:
+               formats: tuple = KNOWN_FORMATS,
+               lane_widths: tuple = DTANS_LANE_WIDTHS,
+               group_sizes: tuple = RGCSR_GROUP_SIZES) -> list[Candidate]:
     """Enumerate candidate formats, cheapest modeled time first."""
-    m, n, vb = fp.rows, fp.cols, fp.value_bytes
 
-    def t(nbytes: int, decode: bool) -> float:
-        return model_time(spmv_bytes(nbytes, n, m, vb), fp.nnz,
-                          warm=warm, decode=decode, machine=machine)
+    def t(fmt: str, nbytes: int, lane_width=None, group_size=None) -> float:
+        return candidate_time(fp, fmt, nbytes, warm=warm, machine=machine,
+                              lane_width=lane_width, group_size=group_size)
 
     out: list[Candidate] = []
     exact = {"csr": csr_nbytes, "coo": coo_nbytes, "sell": sell_nbytes}
     for fmt in formats:
         if fmt in exact:
             b = exact[fmt](fp)
-            out.append(Candidate(fmt=fmt, nbytes=b, modeled_time=t(b, False),
+            out.append(Candidate(fmt=fmt, nbytes=b, modeled_time=t(fmt, b),
                                  exact_size=True))
+        elif fmt == "rgcsr":
+            for g in group_sizes:
+                b = rgcsr_nbytes(fp, g)
+                out.append(Candidate(
+                    fmt="rgcsr", nbytes=b,
+                    modeled_time=t("rgcsr", b, group_size=g),
+                    # Sizes are exact only where the fingerprint carries
+                    # the group-nnz feature; other sweeps are estimates
+                    # until budget refinement constructs them.
+                    exact_size=g in RGCSR_GROUP_SIZES, group_size=g))
         elif fmt == "dtans":
             for w in lane_widths:
                 for shared in DTANS_SHARED_TABLE:
@@ -198,9 +337,23 @@ def candidates(fp: Fingerprint, *, machine: MachineModel = V5E,
                                               shared_table=shared,
                                               params=params)
                     out.append(Candidate(
-                        fmt="dtans", nbytes=b, modeled_time=t(b, True),
+                        fmt="dtans", nbytes=b,
+                        modeled_time=t("dtans", b, lane_width=w),
                         exact_size=False, lane_width=w,
                         shared_table=shared))
+        elif fmt == "rgcsr_dtans":
+            # Shared table only: the group sweep already multiplies the
+            # candidate set, and split tables never paid off at narrow
+            # interleave widths (table bytes double, stream bits do not).
+            for g in group_sizes:
+                b = rgcsr_dtans_nbytes_estimate(fp, group_size=g,
+                                                shared_table=True,
+                                                params=params)
+                out.append(Candidate(
+                    fmt="rgcsr_dtans", nbytes=b,
+                    modeled_time=t("rgcsr_dtans", b, group_size=g),
+                    exact_size=False, lane_width=g, shared_table=True,
+                    group_size=g))
         else:
             raise ValueError(f"unknown format {fmt!r}")
     out.sort(key=lambda c: c.modeled_time)

@@ -24,6 +24,8 @@ import numpy as np
 from repro.core.delta import delta_encode_rows
 from repro.core.entropy import entropy_bits
 from repro.core.params import PAPER, DtansParams
+from repro.sparse.rgcsr import (RGCSR_GROUP_SIZES,  # noqa: F401 (re-export)
+                                max_group_nnz)
 
 #: Max symbols per domain used for the entropy estimates. Strided (not
 #: random) subsampling keeps fingerprints deterministic.
@@ -32,6 +34,34 @@ SAMPLE_CAP = 1 << 16
 #: Slice height used for the exact SELL padding feature (matches
 #: `repro.sparse.formats.SELL.from_csr`'s default).
 SELL_SLICE_HEIGHT = 32
+
+#: Lane/group widths for which the fingerprint carries *exact* lock-step
+#: work counts (`Fingerprint.lockstep`): the union of the dtANS
+#: interleave widths (32, 128) and the RGCSR group sizes.
+LOCKSTEP_WIDTHS = (4, 8, 16, 32, 128)
+
+
+def lockstep_elems(row_nnz: np.ndarray, width: int) -> int:
+    """Elements processed by a ``width``-row lock-step SpMV kernel.
+
+    Each slice of ``width`` consecutive rows runs to its longest row, so
+    the kernel touches ``width * max(row_nnz in slice)`` element slots —
+    SELL's padded storage count, but as *compute* (formats like RGCSR and
+    CSR-dtANS store compactly yet still decode in lock-step). Equals
+    `SELL.from_csr(a, width).indices.size`.
+    """
+    row_nnz = np.asarray(row_nnz, dtype=np.int64)
+    m = int(row_nnz.size)
+    if m == 0:
+        return 0
+    nsl = (m + width - 1) // width
+    padded = np.zeros(nsl * width, dtype=np.int64)
+    padded[:m] = row_nnz
+    return int(padded.reshape(nsl, width).max(axis=1).sum() * width)
+
+
+# (max_group_nnz is defined in `repro.sparse.rgcsr` next to the format
+# accounting it feeds, and re-exported here for the fingerprint API.)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +92,27 @@ class Fingerprint:
     merged_stream_bits: float   # shared delta+value table (paper default)
     delta_escape_frac: float
     value_escape_frac: float
+    # Exact lock-step work per width in LOCKSTEP_WIDTHS, and exact max
+    # group-nnz per group size in RGCSR_GROUP_SIZES (row-nnz histogram
+    # features for the RGCSR candidates; both O(rows) to compute):
+    lockstep_by_width: tuple = ()
+    group_nnz_max: tuple = ()
+
+    def lockstep(self, width: int) -> int:
+        """Exact lock-step work elements for ``width``-row slices; falls
+        back to ``nnz`` (optimistic) for widths outside
+        LOCKSTEP_WIDTHS."""
+        try:
+            return self.lockstep_by_width[LOCKSTEP_WIDTHS.index(width)]
+        except (ValueError, IndexError):
+            return self.nnz
+
+    def group_max_nnz(self, group_size: int) -> int:
+        try:
+            return self.group_nnz_max[
+                RGCSR_GROUP_SIZES.index(group_size)]
+        except (ValueError, IndexError):
+            return self.nnz
 
     def key(self) -> str:
         """Stable content hash — the on-disk decision-cache key."""
@@ -154,7 +205,9 @@ def fingerprint(a, params: DtansParams = PAPER,
             distinct_deltas=0, distinct_values=0, content_checksum=0,
             delta_stream_bits=0.0,
             value_stream_bits=0.0, merged_stream_bits=0.0,
-            delta_escape_frac=0.0, value_escape_frac=0.0)
+            delta_escape_frac=0.0, value_escape_frac=0.0,
+            lockstep_by_width=tuple(0 for _ in LOCKSTEP_WIDTHS),
+            group_nnz_max=tuple(0 for _ in RGCSR_GROUP_SIZES))
 
     mean = float(row_nnz.mean())
     cv = float(row_nnz.std() / mean) if mean > 0 else 0.0
@@ -162,11 +215,14 @@ def fingerprint(a, params: DtansParams = PAPER,
     row_of = np.repeat(np.arange(m, dtype=np.int64), row_nnz)
     bandwidth = int(np.abs(indices - row_of).max())
 
-    C = SELL_SLICE_HEIGHT
-    nsl = (m + C - 1) // C
-    padded = np.zeros(nsl * C, dtype=np.int64)
-    padded[:m] = row_nnz
-    sell_padded = int(padded.reshape(nsl, C).max(axis=1).sum() * C)
+    # One lock-step pass per distinct width; SELL's padding feature is
+    # the same quantity at SELL_SLICE_HEIGHT (cannot diverge from the
+    # lockstep tuple).
+    ls = {w: lockstep_elems(row_nnz, w)
+          for w in set(LOCKSTEP_WIDTHS) | {SELL_SLICE_HEIGHT}}
+    sell_padded = ls[SELL_SLICE_HEIGHT]
+    lockstep = tuple(ls[w] for w in LOCKSTEP_WIDTHS)
+    gmax = tuple(max_group_nnz(row_nnz, g) for g in RGCSR_GROUP_SIZES)
 
     ell = params.l
     syms_per_row = 2 * row_nnz
@@ -210,4 +266,5 @@ def fingerprint(a, params: DtansParams = PAPER,
         delta_stream_bits=d_bits, value_stream_bits=v_bits,
         merged_stream_bits=m_bits,
         delta_escape_frac=d_esc, value_escape_frac=v_esc,
+        lockstep_by_width=lockstep, group_nnz_max=gmax,
     )

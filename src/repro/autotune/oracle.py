@@ -1,0 +1,83 @@
+"""Exhaustive exact-size oracle — the AlphaSparse stand-in.
+
+Constructs/encodes EVERY candidate configuration of every format family
+for a matrix and evaluates the same `cost_model.spmv_time` the selector
+uses, but with byte-exact sizes everywhere (the selector works from
+fingerprint estimates for the entropy-coded families). The argmin is the
+paper-Fig. 9 "best format per matrix" that AlphaSparse pays hours of
+tuning for; `select()`'s regret is measured against it.
+
+This is the single oracle shared by benchmarks/bench_format_selection.py
+and tests/test_autotune.py — selector and oracle evaluate one formula
+(`cost_model.candidate_time`), so a cost-model edit can never make them
+disagree by accident, only by genuinely changing a modeled argmin (which
+the decision-snapshot test then surfaces).
+"""
+
+from __future__ import annotations
+
+from repro.autotune.cost_model import (DTANS_LANE_WIDTHS,
+                                       DTANS_SHARED_TABLE, V5E,
+                                       MachineModel, candidate_time,
+                                       dtans_config_name,
+                                       rgcsr_config_name,
+                                       rgcsr_dtans_config_name)
+from repro.autotune.fingerprint import fingerprint
+from repro.core.params import PAPER, DtansParams
+from repro.sparse.formats import COO, SELL
+from repro.sparse.rgcsr import RGCSR_GROUP_SIZES, rgcsr_nbytes_exact
+
+
+def oracle_times(a, *, warm: bool = True, machine: MachineModel = V5E,
+                 params: DtansParams = PAPER,
+                 lane_widths: tuple = DTANS_LANE_WIDTHS,
+                 group_sizes: tuple = RGCSR_GROUP_SIZES,
+                 encode_cache: dict | None = None) -> dict[str, float]:
+    """config_name -> exact-size modeled seconds, for every candidate.
+
+    ``encode_cache`` (any mutable mapping) memoizes the expensive
+    dtANS encodes across repeated calls (e.g. warm and cold evaluation
+    of the same matrix); keys are (family, width/G, shared).
+    """
+    from repro.core.csr_dtans import encode_matrix
+    from repro.core.rgcsr_dtans import encode_rgcsr_matrix
+
+    fp = fingerprint(a, params=params)
+    enc = encode_cache if encode_cache is not None else {}
+    times: dict[str, float] = {}
+
+    def t(fmt, nbytes, lane_width=None, group_size=None):
+        return candidate_time(fp, fmt, nbytes, warm=warm, machine=machine,
+                              lane_width=lane_width, group_size=group_size)
+
+    times["csr"] = t("csr", a.nbytes)
+    times["coo"] = t("coo", COO.from_csr(a).nbytes)
+    times["sell"] = t("sell", SELL.from_csr(a).nbytes)
+    rnnz = a.row_nnz()
+    vb = a.values.dtype.itemsize
+    for g in group_sizes:
+        times[rgcsr_config_name(g)] = t(
+            "rgcsr", rgcsr_nbytes_exact(rnnz, g, vb), group_size=g)
+    for w in lane_widths:
+        for shared in DTANS_SHARED_TABLE:
+            key = ("dtans", w, shared)
+            if key not in enc:
+                enc[key] = encode_matrix(a, params=params, lane_width=w,
+                                         shared_table=shared).nbytes
+            times[dtans_config_name(w, shared)] = t(
+                "dtans", enc[key], lane_width=w)
+    for g in group_sizes:
+        key = ("rgcsr_dtans", g, True)
+        if key not in enc:
+            enc[key] = encode_rgcsr_matrix(a, group_size=g, params=params,
+                                           shared_table=True).nbytes
+        times[rgcsr_dtans_config_name(g, True)] = t(
+            "rgcsr_dtans", enc[key], group_size=g)
+    return times
+
+
+def oracle_best(a, **kwargs) -> tuple[str, float, dict[str, float]]:
+    """(best config_name, its modeled time, all times) for matrix ``a``."""
+    times = oracle_times(a, **kwargs)
+    best = min(times, key=times.get)
+    return best, times[best], times

@@ -28,12 +28,13 @@ import weakref
 
 from repro.autotune.cache import DecisionCache, default_cache
 from repro.autotune.cost_model import (DTANS_LANE_WIDTHS, V5E, Candidate,
-                                       MachineModel, candidates,
-                                       model_time, spmv_bytes)
+                                       MachineModel, candidate_time,
+                                       candidates)
 from repro.autotune.fingerprint import Fingerprint, fingerprint
 from repro.core.params import PAPER, DtansParams
+from repro.sparse.rgcsr import RGCSR_GROUP_SIZES
 
-ALL_FORMATS = ("csr", "coo", "sell", "dtans")
+ALL_FORMATS = ("csr", "coo", "sell", "rgcsr", "dtans", "rgcsr_dtans")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,16 +51,24 @@ class Decision:
     machine: str
     fingerprint_key: str
     refined: bool
+    group_size: int | None = None    # rgcsr family only
     # (config_name, nbytes, modeled_time) of the best few candidates,
     # cheapest first — kept for regret reporting and debugging.
     leaderboard: tuple = ()
 
     @property
     def config_name(self) -> str:
-        if self.fmt != "dtans":
-            return self.fmt
-        from repro.autotune.cost_model import dtans_config_name
-        return dtans_config_name(self.lane_width, self.shared_table)
+        from repro.autotune.cost_model import (dtans_config_name,
+                                               rgcsr_config_name,
+                                               rgcsr_dtans_config_name)
+        if self.fmt == "dtans":
+            return dtans_config_name(self.lane_width, self.shared_table)
+        if self.fmt == "rgcsr":
+            return rgcsr_config_name(self.group_size)
+        if self.fmt == "rgcsr_dtans":
+            return rgcsr_dtans_config_name(self.group_size,
+                                           self.shared_table)
+        return self.fmt
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -95,13 +104,29 @@ def clear_memo() -> None:
 def _refine(a, cand: Candidate, fp: Fingerprint, *, warm: bool,
             machine: MachineModel, params: DtansParams) -> Candidate:
     """Replace an estimated candidate size with the constructed truth."""
-    if cand.exact_size or cand.fmt != "dtans":
+    if cand.exact_size:
         return cand
-    from repro.core.csr_dtans import encode_matrix
-    b = encode_matrix(a, params=params, lane_width=cand.lane_width,
-                      shared_table=cand.shared_table).nbytes
-    t = model_time(spmv_bytes(b, fp.cols, fp.rows, fp.value_bytes),
-                   fp.nnz, warm=warm, decode=True, machine=machine)
+    if cand.fmt == "dtans":
+        from repro.core.csr_dtans import encode_matrix
+        b = encode_matrix(a, params=params, lane_width=cand.lane_width,
+                          shared_table=cand.shared_table).nbytes
+    elif cand.fmt == "rgcsr_dtans":
+        from repro.core.rgcsr_dtans import encode_rgcsr_matrix
+        b = encode_rgcsr_matrix(a, group_size=cand.group_size,
+                                params=params,
+                                shared_table=cand.shared_table).nbytes
+    elif cand.fmt == "rgcsr":
+        # Estimated only for group sizes outside RGCSR_GROUP_SIZES
+        # (fingerprint lacks their group-nnz feature); the histogram
+        # formula on the real row-nnz is the constructed truth.
+        from repro.sparse.rgcsr import rgcsr_nbytes_exact
+        b = rgcsr_nbytes_exact(a.row_nnz(), cand.group_size,
+                               fp.value_bytes)
+    else:
+        return cand
+    t = candidate_time(fp, cand.fmt, b, warm=warm, machine=machine,
+                       lane_width=cand.lane_width,
+                       group_size=cand.group_size)
     return dataclasses.replace(cand, nbytes=b, modeled_time=t,
                                exact_size=True)
 
@@ -110,6 +135,7 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
            formats: tuple = ALL_FORMATS, budget: int = 0,
            params: DtansParams = PAPER,
            lane_widths: tuple = DTANS_LANE_WIDTHS,
+           group_sizes: tuple = RGCSR_GROUP_SIZES,
            cache: DecisionCache | None = None,
            use_cache: bool = True) -> Decision:
     """Pick the modeled-fastest format for CSR matrix ``a``.
@@ -121,6 +147,7 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
       formats: candidate format families to consider.
       budget: number of top estimated candidates to construct for exact
         sizes before the final argmin (0 = fingerprint estimates only).
+      group_sizes: RGCSR group sizes swept for the rgcsr families.
       cache: decision cache; ``None`` uses the process default
         (persistent on disk). Pass ``DecisionCache(path=None)`` for a
         memory-only cache.
@@ -131,7 +158,7 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
     # *different* cache must consult (and populate) that cache, not
     # short-circuit on the memo.
     cfg = (machine, warm, tuple(formats), int(budget),
-           tuple(lane_widths), params, cache)
+           tuple(lane_widths), tuple(group_sizes), params, cache)
     if use_cache:
         hit = _memo.get(id(a))
         if hit is not None and hit[0]() is a and hit[1] == cfg:
@@ -142,6 +169,7 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
     key = "|".join([fp.key(), machine.signature(), f"warm={int(warm)}",
                     ",".join(formats), f"budget={int(budget)}",
                     ",".join(str(w) for w in lane_widths),
+                    "G" + ",".join(str(g) for g in group_sizes),
                     f"w{pp.w_bits}k{pp.k_bits}l{pp.l}o{pp.o}"
                     f"f{pp.f}m{pp.m_bits}"])
     if use_cache:
@@ -156,7 +184,8 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
                 return dec
 
     cands = candidates(fp, machine=machine, warm=warm, params=params,
-                       formats=tuple(formats), lane_widths=lane_widths)
+                       formats=tuple(formats), lane_widths=lane_widths,
+                       group_sizes=tuple(group_sizes))
     refined = False
     if budget > 0:
         head = [_refine(a, c, fp, warm=warm, machine=machine,
@@ -170,7 +199,7 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
         shared_table=best.shared_table, nbytes=best.nbytes,
         modeled_time=best.modeled_time, exact_size=best.exact_size,
         warm=warm, machine=machine.name, fingerprint_key=fp.key(),
-        refined=refined,
+        refined=refined, group_size=best.group_size,
         leaderboard=tuple((c.config_name, c.nbytes, c.modeled_time)
                           for c in cands[:5]),
     )
@@ -188,11 +217,15 @@ def choose_dtans_config(a, *, machine: MachineModel = V5E,
                         params: DtansParams = PAPER,
                         cache: DecisionCache | None = None,
                         use_cache: bool = True) -> Decision:
-    """Best CSR-dtANS configuration (lane width x table sharing) only.
+    """Best entropy-coded configuration only: CSR-dtANS (lane width x
+    table sharing) or group-aligned RGCSR-dtANS (group size).
 
     Used by `repro.serving.sparse_linear.SparseLinear`'s ``auto=True``
-    path, where the format family is fixed but the knobs are not.
+    path, where the family must decode on the fly but the knobs are
+    free. Both families run the same decode kernels, so the serving
+    stack is indifferent to which one wins.
     """
-    return select(a, machine=machine, warm=warm, formats=("dtans",),
+    return select(a, machine=machine, warm=warm,
+                  formats=("dtans", "rgcsr_dtans"),
                   budget=budget, params=params, cache=cache,
                   use_cache=use_cache)

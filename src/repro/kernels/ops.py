@@ -15,6 +15,7 @@ from repro.core.csr_dtans import CSRdtANS
 from repro.kernels.dtans_decode import dtans_decode_pallas
 from repro.kernels.dtans_spmv import dtans_spmv_pallas
 from repro.kernels.pack import PackedMatrix, pack_matrix
+from repro.kernels.rgcsr_spmv import PackedRGCSR, rgcsr_spmv_pallas
 from repro.kernels.sell_spmv import PackedSELL, sell_spmv_pallas
 
 _PACK_CACHE_FIELD = "_packed_cache"
@@ -72,4 +73,14 @@ def sell_spmv(ps: PackedSELL, x, *, interpret: bool = True) -> jax.Array:
     acc = sell_spmv_pallas(jnp.asarray(ps.indices), jnp.asarray(ps.values),
                            jnp.asarray(x, dtype=ps.values.dtype),
                            interpret=interpret)
+    return acc.reshape(-1)[:m]
+
+
+def rgcsr_spmv(pr: PackedRGCSR, x, *, interpret: bool = True) -> jax.Array:
+    """Row-grouped CSR SpMVM: y = A x (delta prefix-sum in kernel)."""
+    m, _ = pr.shape
+    acc = rgcsr_spmv_pallas(jnp.asarray(pr.deltas), jnp.asarray(pr.values),
+                            jnp.asarray(pr.nnz),
+                            jnp.asarray(x, dtype=pr.values.dtype),
+                            interpret=interpret)
     return acc.reshape(-1)[:m]

@@ -1,0 +1,98 @@
+"""RGCSR SpMVM Pallas kernel (interpret-mode first, like sell_spmv).
+
+One program per row group of G rows. The group's delta streams live in
+VMEM as a (G, Wg) block (Wg = matrix-wide max row nnz — address padding
+only, not counted in `RGCSR.nbytes`, exactly like `pack.py`'s stream
+padding); the kernel reconstructs absolute columns with a per-row prefix
+sum over the deltas, gathers x, and reduces. Compared to the SELL
+kernel, the in-kernel extra work is one add per stored element (the
+delta prefix-sum) — the `spmv_ops_per_elem` the cost model charges —
+while the *stored* bytes carry no per-slice padding.
+
+Structure mirrors `sell_spmv.py`: a dataclass pack product, a Pallas
+kernel over a 1-D group grid, and a pure-jnp oracle for tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.sparse.rgcsr import RGCSR
+
+
+@dataclasses.dataclass
+class PackedRGCSR:
+    deltas: np.ndarray    # (S, G, Wg) int32 delta streams, 0 = padding
+    values: np.ndarray    # (S, G, Wg)
+    nnz: np.ndarray       # (S, G) int32 — real entries per row
+    shape: tuple
+    group_size: int
+
+
+def pack_rgcsr(r: RGCSR) -> PackedRGCSR:
+    m, _ = r.shape
+    G = r.group_size
+    S = r.n_groups
+    rnnz = r.row_nnz()
+    Wg = max(int(rnnz.max()) if m else 0, 1)
+    deltas = np.zeros((S, G, Wg), dtype=np.int32)
+    values = np.zeros((S, G, Wg), dtype=r.values.dtype)
+    nnz = np.zeros((S, G), dtype=np.int32)
+    for g in range(S):
+        base = int(r.group_ptr[g])
+        for i in range(min(G, m - g * G)):
+            lo = base + int(r.local_indptr[g, i])
+            hi = base + int(r.local_indptr[g, i + 1])
+            deltas[g, i, :hi - lo] = r.delta_indices[lo:hi]
+            values[g, i, :hi - lo] = r.values[lo:hi]
+            nnz[g, i] = hi - lo
+    return PackedRGCSR(deltas=deltas, values=values, nnz=nnz,
+                       shape=r.shape, group_size=G)
+
+
+def _rgcsr_kernel(delta_ref, val_ref, nnz_ref, x_ref, y_ref):
+    d = delta_ref[0]          # (G, Wg)
+    v = val_ref[0]
+    nnz = nnz_ref[0]          # (G,)
+    x = x_ref[...]
+    cols = jnp.cumsum(d, axis=1)          # per-row delta prefix-sum
+    mask = (jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+            < nnz[:, None])
+    xg = jnp.take(x, jnp.clip(cols, 0, x.shape[0] - 1), axis=0)
+    y_ref[0, :] = jnp.sum(jnp.where(mask, v * xg, 0), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rgcsr_spmv_pallas(deltas, val, nnz, x, interpret=True):
+    S, G, Wg = deltas.shape
+    n = x.shape[0]
+    return pl.pallas_call(
+        _rgcsr_kernel,
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((1, G, Wg), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, G, Wg), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, G), lambda s: (s, 0)),
+            pl.BlockSpec((n,), lambda s: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, G), lambda s: (s, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, G), val.dtype),
+        interpret=interpret,
+    )(deltas, val, nnz, x)
+
+
+def rgcsr_spmv_ref(deltas: np.ndarray, val: np.ndarray, nnz: np.ndarray,
+                   x: np.ndarray):
+    """Pure-jnp oracle for the RGCSR kernel ((S, G) output)."""
+    x = jnp.asarray(x)
+    cols = jnp.cumsum(deltas, axis=2)
+    mask = (jax.lax.broadcasted_iota(jnp.int32, deltas.shape, 2)
+            < nnz[..., None])
+    xg = jnp.take(x, jnp.clip(cols, 0, x.shape[0] - 1), axis=0)
+    return jnp.sum(jnp.where(mask, val * xg, 0), axis=2)

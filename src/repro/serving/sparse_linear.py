@@ -46,7 +46,9 @@ class SparseLinear:
 
         With ``auto=True`` the ``lane_width`` / ``shared_table`` knobs are
         ignored and chosen per matrix by `repro.autotune` (fingerprint the
-        pruned weight, pick the modeled-fastest CSR-dtANS configuration;
+        pruned weight, pick the modeled-fastest entropy-coded
+        configuration — plain CSR-dtANS or group-aligned RGCSR-dtANS;
+        both run the same decode kernels, so serving is indifferent;
         decisions persist in the autotune cache, so repeated serving runs
         skip the search). ``autotune_budget`` > 0 additionally encodes the
         top candidates to refine estimated sizes into exact ones;
@@ -65,8 +67,14 @@ class SparseLinear:
                                            cache=autotune_cache)
             lane_width = decision.lane_width
             shared_table = decision.shared_table
-        mat = encode_matrix(pruned, lane_width=lane_width,
-                            shared_table=shared_table)
+        if decision is not None and decision.fmt == "rgcsr_dtans":
+            from repro.core.rgcsr_dtans import encode_rgcsr_matrix
+            mat = encode_rgcsr_matrix(pruned,
+                                      group_size=decision.group_size,
+                                      shared_table=shared_table)
+        else:
+            mat = encode_matrix(pruned, lane_width=lane_width,
+                                shared_table=shared_table)
         _, bb = best_baseline_nbytes(pruned)
         return cls(mat=mat, packed=pack_matrix(mat), d_in=d_in,
                    d_out=d_out, dense_bytes=w.size * w.dtype.itemsize,

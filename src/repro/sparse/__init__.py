@@ -1,2 +1,3 @@
-# Sparse-matrix substrate: formats (COO/CSR/SELL), reference SpMVM,
-# random-graph generators, and magnitude pruning for NN weights.
+# Sparse-matrix substrate: formats (COO/CSR/SELL + row-grouped CSR in
+# rgcsr.py), reference SpMVM, random-graph generators, MatrixMarket IO,
+# and magnitude pruning for NN weights.

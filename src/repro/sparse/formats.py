@@ -150,7 +150,13 @@ class SELL:
 
 
 def best_baseline_nbytes(a: CSR) -> tuple[str, int]:
-    """Smallest of CSR/COO/SELL — the paper's compression baseline."""
+    """Smallest of CSR/COO/SELL — the paper's compression baseline.
+
+    RGCSR (`repro.sparse.rgcsr`) is deliberately NOT part of this
+    baseline: the paper compares against the cuSPARSE formats, and the
+    Fig. 6 / Table I reproductions must keep that denominator. Use
+    `all_format_nbytes` for the full byte-exact table.
+    """
     sizes = {
         "csr": a.nbytes,
         "coo": COO.from_csr(a).nbytes,
@@ -158,3 +164,25 @@ def best_baseline_nbytes(a: CSR) -> tuple[str, int]:
     }
     name = min(sizes, key=sizes.get)
     return name, sizes[name]
+
+
+def all_format_nbytes(a: CSR, group_sizes: tuple = None) -> dict[str, int]:
+    """Byte-exact size of every uncompressed format, RGCSR included.
+
+    Returns ``{"csr": ..., "coo": ..., "sell": ..., "rgcsr[G=4]": ...}``.
+    RGCSR sizes come from the row-nnz histogram (no construction), which
+    tests assert equals `RGCSR.from_csr(a, G).nbytes`.
+    """
+    from repro.sparse.rgcsr import (RGCSR_GROUP_SIZES, rgcsr_nbytes_exact)
+    if group_sizes is None:
+        group_sizes = RGCSR_GROUP_SIZES
+    sizes = {
+        "csr": a.nbytes,
+        "coo": COO.from_csr(a).nbytes,
+        "sell": SELL.from_csr(a).nbytes,
+    }
+    rnnz = a.row_nnz()
+    vb = a.values.dtype.itemsize
+    for g in group_sizes:
+        sizes[f"rgcsr[G={g}]"] = rgcsr_nbytes_exact(rnnz, g, vb)
+    return sizes

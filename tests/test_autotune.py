@@ -1,31 +1,53 @@
 """Tests for repro.autotune: fingerprint determinism, cost-model
-monotonicity, cache round-trips, and selector-vs-oracle agreement on a
-synthetic suite (paper Fig. 9's selection question)."""
+monotonicity, cache round-trips, selector-vs-oracle agreement on a
+synthetic suite (paper Fig. 9's selection question), and a frozen
+decision snapshot so cost-model edits cannot silently flip selections."""
+
+import json
+import os
 
 import numpy as np
 import pytest
 
-from repro.autotune import (DecisionCache, V5E, candidates,
-                            choose_dtans_config, clear_memo,
+from repro.autotune import (DecisionCache, RGCSR_GROUP_SIZES, V5E,
+                            candidates, choose_dtans_config, clear_memo,
                             dtans_config_name, dtans_nbytes_estimate,
-                            fingerprint, model_time, select, spmv_bytes)
+                            fingerprint, lockstep_elems, model_time,
+                            oracle_best, rgcsr_dtans_nbytes_estimate,
+                            rgcsr_nbytes, select, spmv_bytes)
 from repro.autotune.cost_model import (DTANS_LANE_WIDTHS,
                                        DTANS_SHARED_TABLE, coo_nbytes,
                                        csr_nbytes, sell_nbytes)
 from repro.autotune.search import Decision
 from repro.core.csr_dtans import encode_matrix
+from repro.core.rgcsr_dtans import encode_rgcsr_matrix
 from repro.sparse.formats import COO, CSR, SELL
 from repro.sparse.prune import codebook_quantize, magnitude_prune
 from repro.sparse.random_graphs import (banded, barabasi_albert,
                                         erdos_renyi, stencil_2d,
                                         watts_strogatz)
+from repro.sparse.rgcsr import RGCSR
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "goldens")
 
 
 def _f32(a: CSR) -> CSR:
     return CSR(a.indptr, a.indices, a.values.astype(np.float32), a.shape)
 
 
+def _powerlaw(m: int = 900, n: int = 900, seed: int = 11) -> CSR:
+    """Zipf row lengths: the skewed-row-length case RGCSR exists for."""
+    rng = np.random.default_rng(seed)
+    lens = np.minimum(rng.zipf(1.6, size=m), n // 2)
+    rows = np.repeat(np.arange(m), lens)
+    cols = np.concatenate([rng.choice(n, size=int(k), replace=False)
+                           for k in lens])
+    vals = np.round(rng.standard_normal(rows.size) * 2) / 2 + 0.25
+    return CSR.from_coo(rows, cols, vals, (m, n))
+
+
 def _mini_suite() -> dict:
+    """The 11-matrix synthetic selection suite (paper-Fig. 9 families)."""
     rng = np.random.default_rng(7)
     w = (rng.standard_normal((512, 512)) / 22).astype(np.float32)
     nn = codebook_quantize(magnitude_prune(w, 0.85), bits=8)
@@ -45,6 +67,7 @@ def _mini_suite() -> dict:
         "single_row": CSR.from_dense(
             np.concatenate([np.ones((1, 300)),
                             np.zeros((59, 300))]).astype(np.float64)),
+        "powerlaw": _powerlaw(),
     }
 
 
@@ -117,7 +140,49 @@ class TestCostModel:
         cands = candidates(fp)
         times = [c.modeled_time for c in cands]
         assert times == sorted(times)
-        assert {c.fmt for c in cands} == {"csr", "coo", "sell", "dtans"}
+        assert {c.fmt for c in cands} == {"csr", "coo", "sell", "rgcsr",
+                                          "dtans", "rgcsr_dtans"}
+
+    @pytest.mark.parametrize("G", RGCSR_GROUP_SIZES)
+    def test_rgcsr_size_exact(self, G):
+        """The selector's 'exact' RGCSR bytes equal the constructed
+        format's own accounting — for uniform and skewed matrices."""
+        for a in (_f32(watts_strogatz(700, 4, 0.05,
+                                      np.random.default_rng(3))),
+                  _f32(_powerlaw(400, 400, seed=5))):
+            assert rgcsr_nbytes(fingerprint(a), G) == \
+                RGCSR.from_csr(a, G).nbytes
+
+    @pytest.mark.parametrize("G", RGCSR_GROUP_SIZES)
+    def test_rgcsr_dtans_estimate_close(self, G):
+        a = _f32(erdos_renyi(900, 8, np.random.default_rng(4)))
+        est = rgcsr_dtans_nbytes_estimate(fingerprint(a), group_size=G)
+        act = encode_rgcsr_matrix(a, group_size=G).nbytes
+        assert abs(est - act) / act < 0.15
+
+    def test_off_sweep_group_size_is_estimate_until_refined(self):
+        """Group sizes outside RGCSR_GROUP_SIZES lack fingerprint
+        features: their size must be flagged estimated, and budget
+        refinement must construct the exact bytes."""
+        a = _f32(erdos_renyi(8000, 10, np.random.default_rng(12)))
+        fp = fingerprint(a)
+        cand = [c for c in candidates(fp, formats=("rgcsr",),
+                                      group_sizes=(64,))
+                if c.fmt == "rgcsr"][0]
+        true_b = RGCSR.from_csr(a, 64).nbytes
+        assert not cand.exact_size
+        assert cand.nbytes >= true_b        # conservative fallback
+        dec = select(a, formats=("rgcsr",), group_sizes=(64,), budget=1,
+                     cache=DecisionCache(path=None))
+        assert dec.exact_size and dec.nbytes == true_b
+
+    def test_lockstep_elems_matches_sell(self):
+        """lockstep work at width C == SELL(C)'s stored element count."""
+        a = _f32(_powerlaw(300, 300, seed=9))
+        rnnz = a.row_nnz()
+        for c in (4, 32):
+            assert lockstep_elems(rnnz, c) == \
+                SELL.from_csr(a, slice_height=c).indices.size
 
 
 class TestCache:
@@ -200,24 +265,9 @@ class TestCache:
 
 
 class TestSelector:
-    def _oracle(self, a: CSR, warm: bool) -> tuple[str, float]:
-        """Exact-size modeled argmin over every candidate config."""
-        m, n = a.shape
-        vb = a.values.dtype.itemsize
-        times = {}
-        for fmt, b in (("csr", a.nbytes), ("coo", COO.from_csr(a).nbytes),
-                       ("sell", SELL.from_csr(a).nbytes)):
-            times[fmt] = model_time(spmv_bytes(b, n, m, vb), a.nnz,
-                                    warm=warm, decode=False)
-        for w in DTANS_LANE_WIDTHS:
-            for shared in DTANS_SHARED_TABLE:
-                b = encode_matrix(a, lane_width=w,
-                                  shared_table=shared).nbytes
-                times[dtans_config_name(w, shared)] = model_time(
-                    spmv_bytes(b, n, m, vb), a.nnz, warm=warm,
-                    decode=True)
-        best = min(times, key=times.get)
-        return best, times
+    #: Encoded-candidate memo shared across the selector tests (the
+    #: exhaustive oracle is the expensive part of this module).
+    _ENC: dict = {}
 
     @pytest.mark.parametrize("warm", [True, False], ids=["warm", "cold"])
     def test_selector_matches_modeled_argmin(self, warm):
@@ -228,13 +278,51 @@ class TestSelector:
         for name, a64 in _mini_suite().items():
             a = _f32(a64)
             dec = select(a, warm=warm, cache=cache)
-            best, times = self._oracle(a, warm)
+            best, t_best, times = oracle_best(
+                a, warm=warm, encode_cache=self._ENC.setdefault(name, {}))
             t_pick = times[dec.config_name]
-            regrets.append(t_pick / times[best] - 1.0)
+            regrets.append(t_pick / t_best - 1.0)
             agree += dec.config_name == best
             total += 1
         assert agree / total >= 0.9, f"agreement {agree}/{total}"
         assert max(regrets) < 0.1, f"max regret {max(regrets):.3f}"
+
+    def test_snapshot_decisions_and_zero_regret(self):
+        """Decision snapshot (satellite): `select()` on the 11-matrix
+        suite must (a) match the frozen choices in
+        tests/goldens/autotune_decisions.json — a cost-model edit that
+        flips a selection fails here and forces a deliberate regen
+        (REPRO_REGEN_GOLDENS=1) — and (b) keep selector-vs-oracle regret
+        at zero, including the new RGCSR candidates. Also pins the
+        ISSUE's acceptance bar: a skewed-row-length matrix selects an
+        rgcsr format."""
+        path = os.path.join(GOLDEN_DIR, "autotune_decisions.json")
+        cache = DecisionCache(path=None)
+        got: dict = {}
+        for warm, tag in ((True, "warm"), (False, "cold")):
+            got[tag] = {}
+            for name, a64 in _mini_suite().items():
+                a = _f32(a64)
+                dec = select(a, warm=warm, cache=cache)
+                best, t_best, times = oracle_best(
+                    a, warm=warm,
+                    encode_cache=self._ENC.setdefault(name, {}))
+                regret = times[dec.config_name] / t_best - 1.0
+                assert regret <= 1e-12, \
+                    f"{tag}/{name}: pick={dec.config_name} " \
+                    f"oracle={best} regret={regret:.4g}"
+                got[tag][name] = dec.config_name
+        skewed = {"powerlaw", "single_row"}
+        assert any(got["warm"][s].startswith("rgcsr") for s in skewed)
+        if os.environ.get("REPRO_REGEN_GOLDENS"):
+            os.makedirs(GOLDEN_DIR, exist_ok=True)
+            with open(path, "w") as f:
+                json.dump(got, f, indent=1, sort_keys=True)
+        with open(path) as f:
+            want = json.load(f)
+        assert got == want, "selection flipped vs snapshot; if this is " \
+            "an intended cost-model change, rerun with " \
+            "REPRO_REGEN_GOLDENS=1 and review the diff"
 
     def test_refinement_budget_gives_exact_sizes(self):
         a = _f32(erdos_renyi(600, 7, np.random.default_rng(6)))
@@ -247,8 +335,12 @@ class TestSelector:
     def test_choose_dtans_config(self):
         a = _f32(banded(800, 6))
         dec = choose_dtans_config(a, cache=DecisionCache(path=None))
-        assert dec.fmt == "dtans"
-        assert dec.lane_width in DTANS_LANE_WIDTHS
+        assert dec.fmt in ("dtans", "rgcsr_dtans")
+        # lane_width is always the interleave width the matrix was
+        # encoded with (== group_size for the rgcsr_dtans family).
+        assert dec.lane_width in DTANS_LANE_WIDTHS + RGCSR_GROUP_SIZES
+        if dec.fmt == "rgcsr_dtans":
+            assert dec.lane_width == dec.group_size
 
     def test_memo_hit_is_fast_and_identical(self):
         import time
@@ -272,8 +364,12 @@ class TestServingIntegration:
         sl = SparseLinear.from_dense(w, sparsity=0.8, auto=True,
                                      autotune_cache=DecisionCache(path=None))
         assert sl.decision is not None
-        assert sl.decision.fmt == "dtans"
+        assert sl.decision.fmt in ("dtans", "rgcsr_dtans")
         assert sl.mat.lane_width == sl.decision.lane_width
+        if sl.decision.fmt == "rgcsr_dtans":
+            from repro.core.rgcsr_dtans import RGCSRdtANS
+            assert isinstance(sl.mat, RGCSRdtANS)
+            assert sl.mat.group_size == sl.decision.group_size
         x = rng.standard_normal((2, 128)).astype(np.float32)
         got = np.asarray(sl.apply(x))
         want = np.asarray(sl.apply_dense_reference(x))

@@ -1,0 +1,143 @@
+"""Golden bitstream vectors: frozen encoded CSR-dtANS outputs.
+
+Compression-ratio tests only notice encoder drift when it changes a
+*size*; a change to table layout, slot assignment, escape handling or
+interleave order that keeps sizes identical would sail through while
+silently breaking every stored bitstream in the wild. These tests pin
+the exact encoded words (streams, escape streams, offsets, table
+layout) of small deterministic matrices.
+
+If an encoder change is INTENTIONAL (a format-version bump), regenerate
+with ``REPRO_REGEN_GOLDENS=1 pytest tests/test_goldens.py`` and review
+the golden diff like any other code change.
+"""
+
+import hashlib
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.csr_dtans import decode_matrix, encode_matrix
+from repro.core.params import TOY
+from repro.core.rgcsr_dtans import encode_rgcsr_matrix
+from repro.sparse.formats import CSR
+from repro.sparse.random_graphs import stencil_2d
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "goldens")
+
+
+def _quantized_f32() -> CSR:
+    """Escape-light float32 matrix with a fixed value codebook."""
+    rng = np.random.default_rng(42)
+    d = np.round(rng.standard_normal((12, 18)) * 2) / 4
+    d[rng.random(d.shape) < 0.55] = 0
+    return CSR.from_dense(d.astype(np.float32))
+
+
+def _escape_heavy_f64() -> CSR:
+    """Raw float64 mantissas: every value escapes the table."""
+    rng = np.random.default_rng(43)
+    d = rng.standard_normal((9, 11))
+    d[rng.random(d.shape) < 0.5] = 0
+    return CSR.from_dense(d)
+
+
+CASES = {
+    # name -> (matrix factory, encode kwargs). The escape case uses the
+    # paper's worked-example TOY parameters (K = 8): with production
+    # K = 4096 every value of a small golden fits in-table, and goldens
+    # must stay small, so TOY is the only way to pin escape handling.
+    "stencil6_f64_w32_shared": (lambda: stencil_2d(6),
+                                dict(lane_width=32, shared_table=True)),
+    "stencil6_f64_w8_split": (lambda: stencil_2d(6),
+                              dict(lane_width=8, shared_table=False)),
+    "quant_f32_w16_shared": (_quantized_f32,
+                             dict(lane_width=16, shared_table=True)),
+    "escapes_f64_w4_toy": (_escape_heavy_f64,
+                           dict(lane_width=4, shared_table=True,
+                                params=TOY)),
+    "rgcsr_stencil6_f64_G8": (lambda: stencil_2d(6),
+                              dict(group_size=8, shared_table=True)),
+}
+
+
+def _encode(name):
+    factory, kw = CASES[name]
+    a = factory()
+    if "group_size" in kw:
+        return a, encode_rgcsr_matrix(a, **kw)
+    return a, encode_matrix(a, **kw)
+
+
+def _table_digest(t) -> str:
+    """SHA-1 over the full slot layout (dtype-pinned): any reordering,
+    multiplicity or escape-slot change flips the digest without storing
+    K x 4 arrays in the golden file."""
+    h = hashlib.sha1()
+    for arr, dt in ((t.slot_symbol, np.uint64), (t.slot_digit, np.int64),
+                    (t.slot_base, np.int64), (t.slot_is_esc, np.uint8)):
+        h.update(np.ascontiguousarray(np.asarray(arr).astype(dt))
+                 .tobytes())
+    return h.hexdigest()
+
+
+def _payload(mat) -> dict:
+    """Every byte the format owns: streams/offsets verbatim, the K-slot
+    table layouts as digests (JSON-stable)."""
+    out = {
+        "nbytes": int(mat.nbytes),
+        "lane_width": int(mat.lane_width),
+        "shape": list(mat.shape),
+        "dtype": np.dtype(mat.dtype).name,
+        "row_nnz": mat.row_nnz.tolist(),
+        "stream": mat.stream.tolist(),
+        "slice_offsets": mat.slice_offsets.tolist(),
+        "esc_streams": [e.tolist() for e in mat.esc_streams],
+        "esc_offsets": mat.esc_offsets.tolist(),
+        "pattern": mat.pattern.tolist(),
+        "tables": [{
+            "layout_sha1": _table_digest(t),
+            "esc_first": int(t.esc_first),
+            "esc_base": int(t.esc_base),
+            "esc_raw_bits": int(t.esc_raw_bits),
+            "used_slots": int(t.used_slots),
+            "K": int(t.K), "M": int(t.M),
+        } for t in mat.tables],
+    }
+    if hasattr(mat, "group_size"):
+        out["group_size"] = int(mat.group_size)
+    return out
+
+
+@pytest.mark.parametrize("name", list(CASES), ids=list(CASES))
+def test_golden_bitstream(name):
+    a, mat = _encode(name)
+    got = _payload(mat)
+    path = os.path.join(GOLDEN_DIR, f"bitstream_{name}.json")
+    if os.environ.get("REPRO_REGEN_GOLDENS"):
+        os.makedirs(GOLDEN_DIR, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(got, f, indent=1, sort_keys=True)
+    with open(path) as f:
+        want = json.load(f)
+    assert got == want, (
+        f"encoded bitstream for {name!r} drifted from the golden vector; "
+        f"if intentional, regenerate with REPRO_REGEN_GOLDENS=1 and "
+        f"review the diff")
+    # goldens must stay decodable, not just frozen
+    dec = decode_matrix(mat)
+    assert np.array_equal(dec.indices, a.indices)
+    assert np.array_equal(dec.values, a.values)
+
+
+def test_goldens_cover_escape_and_table_modes():
+    """The golden set must keep covering: escapes present, escape-free,
+    shared and split tables, and the group-aligned variant."""
+    encs = {name: _encode(name)[1] for name in CASES}
+    assert any(m.esc_count_by_domain.sum() > 0 for m in encs.values())
+    assert any(m.esc_count_by_domain.sum() == 0 for m in encs.values())
+    assert any(len(m.tables) == 1 for m in encs.values())
+    assert any(len(m.tables) == 2 for m in encs.values())
+    assert any(hasattr(m, "group_size") for m in encs.values())

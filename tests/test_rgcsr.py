@@ -1,0 +1,190 @@
+"""RGCSR format family: construction, byte accounting, kernels, and
+property-based bit-exact round-trips (CSR-dtANS and RGCSR-dtANS),
+including symmetric/pattern matrices loaded through `repro.sparse.io`."""
+
+import io
+
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core.csr_dtans import decode_matrix, encode_matrix, spmv_gold
+from repro.core.rgcsr_dtans import RGCSRdtANS, encode_rgcsr_matrix
+from repro.kernels import ops
+from repro.kernels.rgcsr_spmv import pack_rgcsr, rgcsr_spmv_ref
+from repro.sparse.formats import CSR, all_format_nbytes
+from repro.sparse.io import load_mtx
+from repro.sparse.rgcsr import (RGCSR, RGCSR_GROUP_SIZES,
+                                local_indptr_bytes, rgcsr_nbytes_exact)
+from repro.sparse.random_graphs import banded, erdos_renyi, stencil_2d
+
+
+def _assert_same_csr(a: CSR, b: CSR):
+    assert a.shape == b.shape
+    assert np.array_equal(a.indptr, b.indptr)
+    assert np.array_equal(a.indices, b.indices)
+    assert np.array_equal(a.values, b.values)  # bit-exact (lossless)
+
+
+def _random_csr(rng, m, n, density, dtype=np.float64):
+    d = rng.integers(-3, 4, size=(m, n)).astype(dtype)
+    d[rng.random((m, n)) >= density] = 0
+    return CSR.from_dense(d)
+
+
+class TestRGCSRFormat:
+    @pytest.mark.parametrize("G", RGCSR_GROUP_SIZES)
+    def test_roundtrip(self, G):
+        a = erdos_renyi(200, 7, np.random.default_rng(1))
+        _assert_same_csr(a, RGCSR.from_csr(a, G).to_csr())
+
+    def test_roundtrip_empty_and_awkward(self):
+        for d in (np.zeros((8, 9)),
+                  np.diag(np.r_[np.zeros(5), np.arange(1.0, 7.0)]),
+                  np.ones((3, 40))):
+            a = CSR.from_dense(d)
+            for G in (1, 4, 32):
+                r = RGCSR.from_csr(a, G)
+                _assert_same_csr(a, r.to_csr())
+                np.testing.assert_array_equal(r.to_dense(), d)
+
+    @pytest.mark.parametrize("G", RGCSR_GROUP_SIZES)
+    def test_nbytes_matches_histogram_formula(self, G):
+        a = stencil_2d(25)
+        r = RGCSR.from_csr(a, G)
+        assert r.nbytes == rgcsr_nbytes_exact(a.row_nnz(), G,
+                                              a.values.dtype.itemsize)
+        assert all_format_nbytes(a)[f"rgcsr[G={G}]"] == r.nbytes
+
+    def test_local_indptr_width_promotes(self):
+        assert local_indptr_bytes(2 ** 16 - 1) == 2
+        assert local_indptr_bytes(2 ** 16) == 4
+        # one dense row of 70000 nnz forces 4-byte local offsets
+        rnnz = np.array([70000, 3, 3, 3])
+        b4 = rgcsr_nbytes_exact(rnnz, 4, 8)
+        assert b4 == 70009 * 12 + 1 * 5 * 4 + 2 * 4
+
+    def test_spmv_reference(self):
+        rng = np.random.default_rng(2)
+        a = _random_csr(rng, 90, 70, 0.2)
+        r = RGCSR.from_csr(a, 8)
+        x = rng.standard_normal(70)
+        y0 = rng.standard_normal(90)
+        np.testing.assert_allclose(r.spmv(x, y0), a.to_dense() @ x + y0,
+                                   rtol=1e-12)
+
+    def test_group_size_one_and_giant(self):
+        a = banded(60, 3)
+        for G in (1, 128):  # G > m: a single group
+            r = RGCSR.from_csr(a, G)
+            _assert_same_csr(a, r.to_csr())
+
+
+class TestRGCSRKernel:
+    @pytest.mark.parametrize("G", [4, 32])
+    @pytest.mark.parametrize("dtype", [np.float64, np.float32])
+    def test_kernel_vs_ref_and_dense(self, G, dtype):
+        rng = np.random.default_rng(3)
+        a = _random_csr(rng, 130, 75, 0.15, dtype)
+        r = RGCSR.from_csr(a, G)
+        pr = pack_rgcsr(r)
+        x = rng.standard_normal(75).astype(dtype)
+        y_k = np.asarray(ops.rgcsr_spmv(pr, x))
+        y_r = np.asarray(rgcsr_spmv_ref(pr.deltas, pr.values, pr.nnz, x)
+                         ).reshape(-1)[:130]
+        rtol = 1e-12 if dtype == np.float64 else 1e-5
+        np.testing.assert_allclose(y_k, y_r, rtol=rtol)
+        np.testing.assert_allclose(y_k, a.to_dense() @ x, rtol=rtol,
+                                   atol=1e-5 if dtype == np.float32 else 0)
+
+
+class TestRGCSRdtANS:
+    @pytest.mark.parametrize("G", RGCSR_GROUP_SIZES)
+    def test_roundtrip_bit_exact(self, G):
+        a = erdos_renyi(150, 7, np.random.default_rng(4))
+        mat = encode_rgcsr_matrix(a, group_size=G)
+        assert isinstance(mat, RGCSRdtANS)
+        assert mat.n_groups == -(-a.shape[0] // G)
+        _assert_same_csr(a, decode_matrix(mat))
+
+    def test_slices_align_with_groups(self):
+        """The defining property: one decode slice per row group."""
+        a = banded(100, 4)
+        mat = encode_rgcsr_matrix(a, group_size=8)
+        assert mat.lane_width == mat.group_size == 8
+        assert mat.slice_offsets.size == mat.n_groups + 1
+
+    def test_nbytes_beats_csr_dtans_on_row_metadata(self):
+        """Group-local 16-bit row lengths: 2 bytes/row less than the
+        ungrouped format at the same interleave width."""
+        a = banded(640, 5)
+        rg = encode_rgcsr_matrix(a, group_size=32)
+        un = encode_matrix(a, lane_width=32)
+        assert rg.stream.size == un.stream.size      # same streams
+        assert rg.nbytes == un.nbytes - a.shape[0] * 2
+
+    def test_spmv_gold_and_kernel(self):
+        rng = np.random.default_rng(5)
+        a = _random_csr(rng, 120, 90, 0.15)
+        mat = encode_rgcsr_matrix(a, group_size=16)
+        x = rng.standard_normal(90)
+        want = a.to_dense() @ x
+        np.testing.assert_allclose(spmv_gold(mat, x), want, rtol=1e-12)
+        np.testing.assert_allclose(np.asarray(ops.spmv(mat, x)), want,
+                                   rtol=1e-9)
+
+
+def _mtx_symmetric(seed: int, pattern: bool) -> CSR:
+    """A symmetric (or symmetric-pattern) MatrixMarket file -> CSR, via
+    the `repro.sparse.io` text round-trip."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(3, 30))
+    nnz = int(rng.integers(1, 4 * n))
+    r = rng.integers(0, n, size=nnz)
+    c = rng.integers(0, n, size=nnz)
+    lo, hi = np.minimum(r, c), np.maximum(r, c)   # lower triangle
+    field = "pattern" if pattern else "integer"
+    lines = [f"%%MatrixMarket matrix coordinate {field} symmetric",
+             f"{n} {n} {nnz}"]
+    for i in range(nnz):
+        entry = f"{hi[i] + 1} {lo[i] + 1}"
+        if not pattern:
+            entry += f" {int(rng.integers(-5, 6))}"
+        lines.append(entry)
+    return load_mtx(io.StringIO("\n".join(lines) + "\n"))
+
+
+class TestPropertyRoundtrips:
+    """Property-based bit-exactness (skips when hypothesis is absent;
+    the CI no-hypothesis leg exercises the shim path)."""
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2 ** 31))
+    def test_rgcsr_random(self, seed):
+        rng = np.random.default_rng(seed)
+        m, n = int(rng.integers(1, 80)), int(rng.integers(1, 80))
+        a = _random_csr(rng, m, n, float(rng.uniform(0.01, 0.4)))
+        G = int(rng.integers(1, 40))
+        _assert_same_csr(a, RGCSR.from_csr(a, G).to_csr())
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2 ** 31))
+    def test_csr_dtans_and_rgcsr_dtans_random(self, seed):
+        rng = np.random.default_rng(seed)
+        m, n = int(rng.integers(1, 60)), int(rng.integers(1, 60))
+        a = _random_csr(rng, m, n, float(rng.uniform(0.01, 0.4)))
+        _assert_same_csr(a, decode_matrix(
+            encode_matrix(a, lane_width=int(rng.integers(1, 40)))))
+        _assert_same_csr(a, decode_matrix(
+            encode_rgcsr_matrix(a, group_size=int(rng.integers(1, 40)))))
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2 ** 31), pattern=st.booleans())
+    def test_mtx_symmetric_roundtrip(self, seed, pattern):
+        """Symmetric / pattern matrices from `repro.sparse.io` survive
+        both entropy formats bit-exactly."""
+        a = _mtx_symmetric(seed, pattern)
+        _assert_same_csr(a, decode_matrix(encode_matrix(a,
+                                                        lane_width=16)))
+        _assert_same_csr(a, decode_matrix(
+            encode_rgcsr_matrix(a, group_size=8)))

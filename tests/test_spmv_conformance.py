@@ -1,0 +1,186 @@
+"""Cross-kernel SpMV conformance: every SpMV path in the repo against
+dense ``A @ x`` on one shared adversarial corpus.
+
+Two axes, fully parameterized:
+
+* ``SPMV_PATHS`` — name -> callable(a: CSR, x) -> y. EVERY SpMV
+  implementation (numpy references, the gold decode path, the pure-jnp
+  oracles, each Pallas kernel) registers here once; a future format
+  plugs into the whole corpus by adding ONE entry.
+* ``CORPUS`` — name -> dense matrix builder covering the adversarial
+  structure zoo: empty matrix, empty rows, one dense row among empties,
+  power-law row lengths, all-equal values, plus a regular baseline.
+
+Each (path, case, dtype) triple asserts against the dense product to
+1e-5 (float32) / 1e-12 (float64) — the ISSUE's acceptance bar.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.csr_dtans import encode_matrix, spmv_gold
+from repro.core.rgcsr_dtans import encode_rgcsr_matrix
+from repro.kernels import ops
+from repro.kernels.pack import pack_matrix
+from repro.kernels.ref import spmv_ref
+from repro.kernels.rgcsr_spmv import pack_rgcsr, rgcsr_spmv_ref
+from repro.kernels.sell_spmv import pack_sell, sell_spmv_ref
+from repro.sparse.formats import CSR
+from repro.sparse.rgcsr import RGCSR
+
+# --------------------------------------------------------------------------
+# SpMV path registry: one line per implementation.
+# --------------------------------------------------------------------------
+
+
+def _csr_ref(a: CSR, x):
+    """Row-sequential numpy CSR SpMV (the scalar reference)."""
+    y = np.zeros(a.shape[0], dtype=a.values.dtype)
+    for i in range(a.shape[0]):
+        s, e = a.indptr[i], a.indptr[i + 1]
+        y[i] = a.values[s:e] @ x[a.indices[s:e]]
+    return y
+
+
+def _sell_kernel(a: CSR, x):
+    return np.asarray(ops.sell_spmv(pack_sell(a, lane_width=16), x))
+
+
+def _sell_oracle(a: CSR, x):
+    ps = pack_sell(a, lane_width=16)
+    return np.asarray(sell_spmv_ref(ps.indices, ps.values, x)
+                      ).reshape(-1)[:a.shape[0]]
+
+
+def _rgcsr_kernel(a: CSR, x):
+    return np.asarray(ops.rgcsr_spmv(pack_rgcsr(RGCSR.from_csr(a, 8)), x))
+
+
+def _rgcsr_ref(a: CSR, x):
+    pr = pack_rgcsr(RGCSR.from_csr(a, 8))
+    return np.asarray(rgcsr_spmv_ref(pr.deltas, pr.values, pr.nnz, x)
+                      ).reshape(-1)[:a.shape[0]]
+
+
+def _rgcsr_numpy(a: CSR, x):
+    return RGCSR.from_csr(a, 4).spmv(np.asarray(x, dtype=a.values.dtype))
+
+
+def _dtans_gold(a: CSR, x):
+    return spmv_gold(encode_matrix(a, lane_width=16), x)
+
+
+def _dtans_oracle(a: CSR, x):
+    return np.asarray(spmv_ref(pack_matrix(encode_matrix(a,
+                                                         lane_width=16)),
+                               x))
+
+
+def _dtans_kernel(a: CSR, x):
+    return np.asarray(ops.spmv(encode_matrix(a, lane_width=16), x))
+
+
+def _rgcsr_dtans_gold(a: CSR, x):
+    return spmv_gold(encode_rgcsr_matrix(a, group_size=8), x)
+
+
+def _rgcsr_dtans_kernel(a: CSR, x):
+    return np.asarray(ops.spmv(encode_rgcsr_matrix(a, group_size=8), x))
+
+
+SPMV_PATHS = {
+    "csr_ref": _csr_ref,
+    "rgcsr_numpy": _rgcsr_numpy,
+    "sell_oracle": _sell_oracle,
+    "sell_kernel": _sell_kernel,
+    "rgcsr_oracle": _rgcsr_ref,
+    "rgcsr_kernel": _rgcsr_kernel,
+    "dtans_gold": _dtans_gold,
+    "dtans_oracle": _dtans_oracle,
+    "dtans_kernel": _dtans_kernel,
+    "rgcsr_dtans_gold": _rgcsr_dtans_gold,
+    "rgcsr_dtans_kernel": _rgcsr_dtans_kernel,
+}
+
+# --------------------------------------------------------------------------
+# Adversarial corpus: name -> dense matrix (float64 master copy).
+# --------------------------------------------------------------------------
+
+
+def _empty():
+    return np.zeros((20, 30))
+
+
+def _empty_rows():
+    d = np.zeros((37, 23))
+    d[3, 1:20:3] = np.arange(1.0, 8.0)
+    d[20, 22] = -4.0
+    return d
+
+
+def _one_dense_row():
+    d = np.zeros((40, 50))
+    d[17, :] = np.linspace(-2, 2, 50)
+    d[0, 0] = 1.0
+    return d
+
+
+def _powerlaw():
+    rng = np.random.default_rng(13)
+    m, n = 60, 45
+    d = np.zeros((m, n))
+    lens = np.minimum(rng.zipf(1.5, size=m), n)
+    for i, k in enumerate(lens):
+        cols = rng.choice(n, size=int(k), replace=False)
+        d[i, cols] = np.round(rng.standard_normal(int(k)) * 2) / 2 + 0.25
+    return d
+
+
+def _all_equal_values():
+    rng = np.random.default_rng(14)
+    d = np.where(rng.random((31, 29)) < 0.25, 0.5, 0.0)
+    return d
+
+
+def _regular():
+    d = np.zeros((48, 48))
+    idx = np.arange(48)
+    for off in (-2, 0, 3):
+        sel = (idx + off >= 0) & (idx + off < 48)
+        d[idx[sel], idx[sel] + off] = 1.0 + 0.125 * idx[sel]
+    return d
+
+
+CORPUS = {
+    "empty": _empty,
+    "empty_rows": _empty_rows,
+    "one_dense_row": _one_dense_row,
+    "powerlaw": _powerlaw,
+    "all_equal_values": _all_equal_values,
+    "regular": _regular,
+}
+
+TOL = {np.float32: 1e-5, np.float64: 1e-12}
+
+
+@pytest.fixture(scope="module", params=list(CORPUS), ids=list(CORPUS))
+def dense_case(request):
+    return request.param, CORPUS[request.param]()
+
+
+@pytest.mark.parametrize("path", list(SPMV_PATHS), ids=list(SPMV_PATHS))
+@pytest.mark.parametrize("dtype", [np.float32, np.float64],
+                         ids=["f32", "f64"])
+def test_spmv_conformance(dense_case, path, dtype):
+    name, d64 = dense_case
+    d = d64.astype(dtype)
+    a = CSR.from_dense(d)
+    rng = np.random.default_rng(99)
+    x = rng.standard_normal(a.shape[1]).astype(dtype)
+    got = np.asarray(SPMV_PATHS[path](a, x))
+    want = d @ x
+    assert got.shape == want.shape, f"{path} on {name}: shape mismatch"
+    tol = TOL[dtype]
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol,
+                               err_msg=f"{path} diverges from dense "
+                                       f"A@x on corpus case {name!r}")
