@@ -28,6 +28,17 @@ overhead relative to one modeled SpMVM pass, and — per matrix — how the
 best row-grouped candidate (RGCSR / RGCSR-dtANS) fares against the best
 ungrouped one (the padding-waste vs slice-alignment trade the group
 sweep exists for).
+
+The ``fig9meas/`` rows close the modeled-vs-measured loop:
+``select(budget=2, measure=True)`` wall-clock times the top candidates'
+real kernels (`repro.autotune.measure`; Pallas interpret mode on CPU
+hosts, so the absolute microseconds are harness numbers, not TPU
+claims), and the *measured* regret compares the selector's measured
+pick against the measured time of the exact-size oracle's pick — the
+regret currency AlphaSparse actually optimizes. ``model_err`` is the
+|modeled - measured| / measured gap of the pick under the hand-tuned
+MachineModel; the ``calib`` benchmark section shows how much
+calibration shrinks it.
 """
 
 from __future__ import annotations
@@ -37,7 +48,8 @@ import time
 import numpy as np
 
 from benchmarks.suite import cached_suite, model_time, spmv_bytes
-from repro.autotune import DecisionCache, clear_memo, select
+from repro.autotune import (DecisionCache, clear_memo, measure_named,
+                            select)
 from repro.autotune.oracle import oracle_best
 from repro.sparse.formats import CSR, all_format_nbytes
 
@@ -45,14 +57,17 @@ from repro.sparse.formats import CSR, all_format_nbytes
 _ENC: dict = {}
 
 
-def run(small: bool = False):
+def run(small: bool = False, measure: bool = True):
     rows = []
     wins = 0
     agree = 0
     total = 0
     regrets = []
+    meas_regrets = []
+    model_errs = []
     rg_wins = 0
     cache = DecisionCache(path=None)  # memory-only: honest measurement
+    cache_meas = DecisionCache(path=None)
     clear_memo()
 
     for name, a64 in cached_suite(small=small).items():
@@ -82,7 +97,7 @@ def run(small: bool = False):
         t_uncomp = min(model_time(spmv_bytes(sizes[k], n, m, vb), a.nnz,
                                   warm=True, decode=False)
                        for k in ("csr", "coo", "sell"))
-        dtans_b = enc[("dtans", 128, True)]      # encode_matrix defaults
+        dtans_b = enc[("dtans", 128, True)].nbytes   # encode_matrix defaults
         t_dtans = model_time(spmv_bytes(dtans_b, n, m, vb), a.nnz,
                              warm=True, decode=True)
         sp = t_uncomp / t_dtans
@@ -109,6 +124,28 @@ def run(small: bool = False):
                      f"regret={regret:.4f};"
                      f"hit_overhead_vs_pass={t_hit / o_time:.3f}"))
 
+        # --- measured refinement: time the real kernels of the top
+        # candidates and compare against the measured oracle pick
+        if measure:
+            clear_memo()
+            dec_m = select(a, warm=True, budget=2, measure=True,
+                           measure_repeats=2, cache=cache_meas,
+                           artifacts=enc)
+            if dec_m.config_name == o_name:
+                t_meas_oracle = dec_m.measured_time
+            else:
+                t_meas_oracle = measure_named(a, o_name, repeats=2,
+                                              artifacts=enc)
+            m_regret = dec_m.measured_time / t_meas_oracle - 1.0
+            meas_regrets.append(m_regret)
+            m_err = (abs(dec_m.modeled_time - dec_m.measured_time)
+                     / dec_m.measured_time)
+            model_errs.append(m_err)
+            rows.append((f"fig9meas/{name}", dec_m.measured_time * 1e6,
+                         f"pick={dec_m.config_name};oracle={o_name};"
+                         f"measured_regret={m_regret:.4f};"
+                         f"model_err={m_err:.3f}"))
+
     rows.append(("fig9/wins", 0.0, f"{wins}/{total}"))
     rows.append(("fig9rg/wins", 0.0, f"{rg_wins}/{total}"))
     rows.append(("fig9sel/agreement", 0.0, f"{agree}/{total}"))
@@ -116,6 +153,13 @@ def run(small: bool = False):
                  f"{float(np.mean(regrets)):.4f}"))
     rows.append(("fig9sel/max_regret", 0.0,
                  f"{float(np.max(regrets)):.4f}"))
+    if meas_regrets:
+        rows.append(("fig9meas/mean_measured_regret", 0.0,
+                     f"{float(np.mean(meas_regrets)):.4f}"))
+        rows.append(("fig9meas/max_measured_regret", 0.0,
+                     f"{float(np.max(meas_regrets)):.4f}"))
+        rows.append(("fig9meas/mean_model_err", 0.0,
+                     f"{float(np.mean(model_errs)):.3f}"))
     return rows
 
 

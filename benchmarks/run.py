@@ -4,7 +4,11 @@ Prints ``name,us_per_call,derived`` CSV.
   fig4    — delta-encoding entropy reduction (random graph models)
   fig6    — compression vs best of CSR/COO/SELL + Table I success rates
   fig7/8  — modeled SpMVM speedup, warm (Table II) & cold (Table III)
-  fig9    — vs oracle format selector (AlphaSparse stand-in)
+  fig9    — vs oracle format selector (AlphaSparse stand-in), including
+            measured-refinement regret (wall-clock timed kernels)
+  calib   — MachineModel calibration: fit cost-model constants to
+            measured kernel times; ``--profile-json`` persists the
+            fitted machine profile (CI uploads it as an artifact)
   roofline— summary of the dry-run roofline table when present
 """
 
@@ -24,10 +28,17 @@ def main() -> None:
                     help="also write the rows as a JSON list of "
                          "{name, us_per_call, derived} objects (CI "
                          "artifact)")
+    ap.add_argument("--no-measure", action="store_true",
+                    help="skip wall-clock kernel timing in fig9 "
+                         "(modeled-only rows)")
+    ap.add_argument("--profile-json", default=None, metavar="PATH",
+                    help="persist the calib section's fitted machine "
+                         "profile to this JSON file (CI artifact)")
     args, _ = ap.parse_known_args()
 
-    from benchmarks import (bench_compression, bench_delta_entropy,
-                            bench_format_selection, bench_spmv)
+    from benchmarks import (bench_calibration, bench_compression,
+                            bench_delta_entropy, bench_format_selection,
+                            bench_spmv)
 
     print("name,us_per_call,derived")
     sections = {
@@ -36,7 +47,10 @@ def main() -> None:
         "fig7": lambda: bench_spmv.run(small=args.small, warm=True),
         "fig8": lambda: bench_spmv.run(small=args.small, warm=False,
                                        measure=False),
-        "fig9": lambda: bench_format_selection.run(small=args.small),
+        "fig9": lambda: bench_format_selection.run(
+            small=args.small, measure=not args.no_measure),
+        "calib": lambda: bench_calibration.run(
+            small=args.small, profile_json=args.profile_json),
     }
     collected = []
     for name, fn in sections.items():

@@ -13,8 +13,8 @@ a persistent cache (`cache.DecisionCache`).
     decision = select(csr_matrix, warm=False, budget=2)  # refine top-2
 """
 
-from repro.autotune.cache import (DecisionCache, default_cache,
-                                  default_cache_path)
+from repro.autotune.cache import (DecisionCache, atomic_merge_json,
+                                  default_cache, default_cache_path)
 from repro.autotune.cost_model import (DTANS_LANE_WIDTHS, V5E, Candidate,
                                        MachineModel, candidate_time,
                                        candidates, coo_nbytes, csr_nbytes,
@@ -29,6 +29,12 @@ from repro.autotune.cost_model import (DTANS_LANE_WIDTHS, V5E, Candidate,
 from repro.autotune.fingerprint import (Fingerprint, codeable_bits,
                                         fingerprint, lockstep_elems,
                                         max_group_nnz)
+from repro.autotune.measure import (CalibrationResult, calibrate,
+                                    default_profiles_path, list_profiles,
+                                    load_profile, measure_candidate,
+                                    measure_config, measure_named,
+                                    parse_config_name, save_profile,
+                                    spmv_runner, time_kernel)
 from repro.autotune.oracle import oracle_best, oracle_times
 from repro.autotune.search import (ALL_FORMATS, Decision,
                                    choose_dtans_config, clear_memo,
@@ -36,16 +42,22 @@ from repro.autotune.search import (ALL_FORMATS, Decision,
 from repro.sparse.rgcsr import RGCSR_GROUP_SIZES
 
 __all__ = [
-    "ALL_FORMATS", "Candidate", "Decision", "DecisionCache",
+    "ALL_FORMATS", "CalibrationResult", "Candidate", "Decision",
+    "DecisionCache",
     "DTANS_LANE_WIDTHS", "Fingerprint", "MachineModel",
     "RGCSR_GROUP_SIZES", "V5E",
+    "atomic_merge_json", "calibrate",
     "candidate_time", "candidates", "choose_dtans_config", "clear_memo",
     "codeable_bits",
     "coo_nbytes", "csr_nbytes", "default_cache", "default_cache_path",
+    "default_profiles_path",
     "dtans_config_name",
     "dtans_nbytes_estimate", "fingerprint", "format_ops_per_elem",
-    "lockstep_elems", "max_group_nnz", "model_time", "oracle_best",
+    "list_profiles", "load_profile", "lockstep_elems", "max_group_nnz",
+    "measure_candidate", "measure_config", "measure_named", "model_time",
+    "oracle_best", "parse_config_name",
     "oracle_times", "rgcsr_config_name", "rgcsr_dtans_config_name",
-    "rgcsr_dtans_nbytes_estimate", "rgcsr_nbytes", "select",
-    "sell_nbytes", "spmv_bytes", "spmv_time",
+    "rgcsr_dtans_nbytes_estimate", "rgcsr_nbytes", "save_profile",
+    "select",
+    "sell_nbytes", "spmv_bytes", "spmv_time", "time_kernel",
 ]

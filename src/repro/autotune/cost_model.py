@@ -71,6 +71,21 @@ class MachineModel:
                 f"{self.decode_ops_per_nnz:g}:{self.spmv_ops_per_elem:g}:"
                 f"{self.row_seq_penalty:g}")
 
+    def to_dict(self) -> dict:
+        """JSON form — the payload of a persisted machine profile
+        (`repro.autotune.measure.save_profile`)."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "MachineModel":
+        """Inverse of `to_dict`; unknown keys are rejected so a foreign
+        profile file fails loudly rather than half-applying."""
+        fields = {f.name for f in dataclasses.fields(cls)}
+        extra = set(d) - fields
+        if extra:
+            raise ValueError(f"unknown MachineModel fields: {sorted(extra)}")
+        return cls(**d)
+
 
 def dtans_config_name(lane_width: int, shared_table: bool) -> str:
     """Canonical display/lookup name of one CSR-dtANS configuration.
@@ -194,6 +209,9 @@ class Candidate:
     lane_width: int | None = None      # dtans family only
     shared_table: bool | None = None   # dtans family only
     group_size: int | None = None      # rgcsr family only
+    # Median wall-clock seconds from `repro.autotune.measure`; filled
+    # by the measured-refinement pass, None for modeled-only search.
+    measured_time: float | None = None
 
     @property
     def config_name(self) -> str:

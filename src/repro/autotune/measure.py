@@ -1,0 +1,544 @@
+"""Wall-clock kernel measurement and MachineModel calibration.
+
+The cost model's constants (`spmv_ops_per_elem`, `row_seq_penalty`,
+bandwidth terms) started life as educated guesses; SMASH and AlphaSparse
+both show format choice flips with the *machine*, not just the matrix.
+This module closes the loop three ways:
+
+* **Timing harness** — `spmv_runner` builds a zero-arg callable that
+  runs one ``y = A x`` through the registered kernel path of any
+  candidate (format, config); `time_kernel` times it with warmup,
+  ``block_until_ready`` and a median-of-k repeat. Kernels run in Pallas
+  interpret mode by default so the harness works on CPU CI hosts;
+  on-accelerator callers pass ``interpret=False`` for compiled numbers.
+* **Measured refinement** — `search.select(budget=k, measure=True)`
+  calls `measure_candidate` on the top-k candidates so the final argmin
+  ranks *measured* seconds, not modeled ones, and the measurement flows
+  into ``Decision.measured_time`` and the persistent cache.
+* **Calibration** — `calibrate` times a small synthetic sweep across
+  the format families and least-squares-fits the MachineModel constants
+  to the measurements. Fitted models persist as *named machine
+  profiles* (`save_profile` / `load_profile`, JSON beside the decision
+  cache); `MachineModel.signature()` carries the constants into every
+  decision-cache key, so loading a different profile can never serve
+  decisions tuned for another machine.
+
+Measured seconds and modeled seconds are different currencies (interpret
+mode on a CPU host is many orders of magnitude off the v5e roofline);
+they are never compared across candidates — measurement re-ranks only
+among measured candidates, and calibration exists precisely to bring the
+model into the measured currency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.autotune.cache import atomic_merge_json, default_cache_path
+from repro.autotune.cost_model import (DECODE_FORMATS, LOCKSTEP_FORMATS,
+                                       V5E, Candidate, MachineModel,
+                                       candidate_time, spmv_bytes)
+from repro.autotune.fingerprint import fingerprint
+from repro.core.params import PAPER, DtansParams
+
+#: Timing defaults: one warmup call (compilation / trace caching), then
+#: a median over this many timed calls.
+DEFAULT_WARMUP = 1
+DEFAULT_REPEATS = 3
+
+#: Slice height of the SELL runner — matches the cost model's exact
+#: `sell_nbytes` / `sell_padded_nnz` features (SELL_SLICE_HEIGHT).
+SELL_RUNNER_SLICE = 32
+
+_PROFILE_ENV = "REPRO_MACHINE_PROFILES"
+
+
+# --------------------------------------------------------------------------
+# Timing harness
+# --------------------------------------------------------------------------
+
+
+def time_kernel(fn, *, warmup: int = DEFAULT_WARMUP,
+                repeats: int = DEFAULT_REPEATS) -> float:
+    """Median wall-clock seconds of ``fn()`` (a device computation).
+
+    ``fn`` returns a jax array (or pytree of them); every call is fenced
+    with ``block_until_ready`` so dispatch-async time is not mistaken
+    for kernel time. The first ``warmup`` calls absorb compilation and
+    trace caching; the median of ``repeats`` timed calls resists
+    scheduler noise better than the mean.
+    """
+    import jax
+    if repeats < 1:
+        raise ValueError("repeats must be >= 1")
+    for _ in range(max(warmup, 0)):
+        jax.block_until_ready(fn())
+    samples = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        samples.append(time.perf_counter() - t0)
+    return float(np.median(samples))
+
+
+def _default_x(a) -> np.ndarray:
+    rng = np.random.default_rng(0xA0)
+    return rng.standard_normal(a.shape[1]).astype(a.values.dtype)
+
+
+def _rowseq_runner(a, x, interpret):
+    """Row-sequential (CSR/COO) runner: gather + scatter-add under jit.
+
+    There is no Pallas kernel for the row-sequential formats (the paper
+    abandons them on GPUs for the same reason the cost model charges
+    ``row_seq_penalty``); their measurable stand-in is the XLA
+    scatter-add SpMV both formats lower to. ``interpret`` is accepted
+    for signature uniformity and ignored.
+    """
+    import jax
+    import jax.numpy as jnp
+    m = a.shape[0]
+    rows = jnp.asarray(np.repeat(np.arange(m, dtype=np.int64),
+                                 np.diff(a.indptr)))
+    idx = jnp.asarray(a.indices)
+    vals = jnp.asarray(a.values)
+    xj = jnp.asarray(x, dtype=a.values.dtype)
+
+    @jax.jit
+    def run():
+        return jnp.zeros(m, vals.dtype).at[rows].add(vals * xj[idx])
+
+    return run
+
+
+def _dense_runner(a, x, interpret):
+    """Dense ``A @ x`` under jit — the bandwidth anchor of calibration."""
+    import jax
+    import jax.numpy as jnp
+    d = jnp.asarray(a.to_dense())
+    xj = jnp.asarray(x, dtype=d.dtype)
+    return jax.jit(lambda: d @ xj)
+
+
+def spmv_runner(a, fmt: str, *, lane_width: int | None = None,
+                group_size: int | None = None, shared_table: bool = True,
+                params: DtansParams = PAPER, x: np.ndarray | None = None,
+                interpret: bool = True, artifacts: dict | None = None):
+    """Zero-arg callable running one ``y = A x`` through the registered
+    kernel path of (format, config); feed it to `time_kernel`.
+
+    ``artifacts`` (any mutable mapping) memoizes the expensive dtANS
+    encodes under the same ``(family, width/G, shared)`` keys the
+    exhaustive oracle uses — benchmarks that already ran the oracle time
+    kernels without re-encoding.
+
+    Registered paths: ``ops.spmv`` (dtans / rgcsr_dtans),
+    ``ops.sell_spmv``, ``ops.rgcsr_spmv``, the XLA scatter-add SpMV for
+    the kernel-less row-sequential formats (csr / coo), and a jit'd
+    dense ``A @ x`` (``fmt="dense"``, calibration's bandwidth anchor).
+    """
+    from repro.kernels import ops
+    x = _default_x(a) if x is None else x
+    enc = artifacts if artifacts is not None else {}
+
+    if fmt in ("csr", "coo"):
+        return _rowseq_runner(a, x, interpret)
+    if fmt == "dense":
+        return _dense_runner(a, x, interpret)
+    if fmt == "sell":
+        from repro.kernels.sell_spmv import pack_sell
+        ps = pack_sell(a, lane_width=SELL_RUNNER_SLICE)
+        return lambda: ops.sell_spmv(ps, x, interpret=interpret)
+    if fmt == "rgcsr":
+        from repro.kernels.rgcsr_spmv import pack_rgcsr
+        from repro.sparse.rgcsr import RGCSR
+        pr = pack_rgcsr(RGCSR.from_csr(a, int(group_size)))
+        return lambda: ops.rgcsr_spmv(pr, x, interpret=interpret)
+    if fmt == "dtans":
+        from repro.core.csr_dtans import encode_matrix
+        key = ("dtans", int(lane_width), bool(shared_table))
+        mat = enc.get(key)
+        if not hasattr(mat, "nbytes"):       # miss or legacy int entry
+            mat = encode_matrix(a, params=params, lane_width=int(lane_width),
+                                shared_table=bool(shared_table))
+            enc[key] = mat
+        # get_packed caches the pack on the encoded object, so repeat
+        # measurements of a memoized artifact never re-pack.
+        pm = ops.get_packed(mat)
+        return lambda: ops.spmv(pm, x, interpret=interpret)
+    if fmt == "rgcsr_dtans":
+        from repro.core.rgcsr_dtans import encode_rgcsr_matrix
+        key = ("rgcsr_dtans", int(group_size), bool(shared_table))
+        mat = enc.get(key)
+        if not hasattr(mat, "nbytes"):
+            mat = encode_rgcsr_matrix(a, group_size=int(group_size),
+                                      params=params,
+                                      shared_table=bool(shared_table))
+            enc[key] = mat
+        pm = ops.get_packed(mat)
+        return lambda: ops.spmv(pm, x, interpret=interpret)
+    raise ValueError(f"no registered SpMV runner for format {fmt!r}")
+
+
+def measure_config(a, fmt: str, *, lane_width: int | None = None,
+                   group_size: int | None = None,
+                   shared_table: bool = True,
+                   params: DtansParams = PAPER,
+                   x: np.ndarray | None = None, interpret: bool = True,
+                   warmup: int = DEFAULT_WARMUP,
+                   repeats: int = DEFAULT_REPEATS,
+                   artifacts: dict | None = None) -> float:
+    """Measured median seconds of one (format, config) SpMV on ``a``."""
+    fn = spmv_runner(a, fmt, lane_width=lane_width, group_size=group_size,
+                     shared_table=shared_table, params=params, x=x,
+                     interpret=interpret, artifacts=artifacts)
+    return time_kernel(fn, warmup=warmup, repeats=repeats)
+
+
+def parse_config_name(name: str) -> dict:
+    """Invert the canonical config names (`dtans_config_name` et al.)
+    into `measure_config` keyword arguments.
+
+    Accepted: ``csr`` / ``coo`` / ``sell`` / ``dense``,
+    ``rgcsr[G=8]``, ``dtans[w=32,shared|split]``,
+    ``rgcsr_dtans[G=8,shared|split]``.
+    """
+    if "[" not in name:
+        if name not in ("csr", "coo", "sell", "dense"):
+            raise ValueError(f"unknown config name {name!r}")
+        return {"fmt": name}
+    fmt, _, rest = name.partition("[")
+    parts = rest.rstrip("]").split(",")
+    out: dict = {"fmt": fmt}
+    for p in parts:
+        if p == "shared":
+            out["shared_table"] = True
+        elif p == "split":
+            out["shared_table"] = False
+        elif p.startswith("G="):
+            out["group_size"] = int(p[2:])
+        elif p.startswith("w="):
+            out["lane_width"] = int(p[2:])
+        else:
+            raise ValueError(f"unknown config component {p!r} in {name!r}")
+    return out
+
+
+def measure_named(a, config_name: str, *, params: DtansParams = PAPER,
+                  x: np.ndarray | None = None, interpret: bool = True,
+                  warmup: int = DEFAULT_WARMUP,
+                  repeats: int = DEFAULT_REPEATS,
+                  artifacts: dict | None = None) -> float:
+    """`measure_config` addressed by canonical config name — how the
+    benchmarks time the exhaustive oracle's pick."""
+    return measure_config(a, **parse_config_name(config_name),
+                          params=params, x=x, interpret=interpret,
+                          warmup=warmup, repeats=repeats,
+                          artifacts=artifacts)
+
+
+def measure_candidate(a, cand: Candidate, *, params: DtansParams = PAPER,
+                      x: np.ndarray | None = None, interpret: bool = True,
+                      warmup: int = DEFAULT_WARMUP,
+                      repeats: int = DEFAULT_REPEATS,
+                      artifacts: dict | None = None) -> float:
+    """`measure_config` keyed off a cost-model `Candidate`."""
+    return measure_config(
+        a, cand.fmt, lane_width=cand.lane_width,
+        group_size=cand.group_size,
+        shared_table=bool(cand.shared_table)
+        if cand.shared_table is not None else True,
+        params=params, x=x, interpret=interpret, warmup=warmup,
+        repeats=repeats, artifacts=artifacts)
+
+
+# --------------------------------------------------------------------------
+# Calibration: fit MachineModel constants to measured kernel times
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationPoint:
+    """One (matrix, config) measurement with its model features."""
+
+    matrix: str
+    config_name: str
+    fmt: str
+    nbytes: int
+    work_elems: int
+    measured: float          # seconds
+    modeled_before: float    # seconds under the base (hand-tuned) model
+    modeled_after: float = float("nan")   # filled in after the fit
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationResult:
+    model: MachineModel
+    err_before: float        # mean |modeled - measured| / measured
+    err_after: float
+    points: tuple            # CalibrationPoint per measurement
+
+    def to_dict(self) -> dict:
+        return {
+            "model": self.model.to_dict(),
+            "err_before": self.err_before,
+            "err_after": self.err_after,
+            "points": [dataclasses.asdict(p) for p in self.points],
+        }
+
+
+def _calibration_suite(small: bool = True) -> dict:
+    """Small deterministic sweep spanning the structure axes the model's
+    work terms distinguish: regular (banded/stencil), irregular (ER),
+    skewed row lengths (the lock-step penalty case) and a low-entropy
+    quantized NN weight (the decode-term case)."""
+    from repro.sparse.formats import CSR
+    from repro.sparse.prune import codebook_quantize, magnitude_prune
+    from repro.sparse.random_graphs import banded, erdos_renyi, stencil_2d
+    f = 1 if small else 2
+    rng = np.random.default_rng(21)
+    w = (rng.standard_normal((256 * f, 256 * f)) / 16).astype(np.float32)
+    out = {
+        "banded": banded(1500 * f, 5),
+        "stencil": stencil_2d(28 * f),
+        "er": erdos_renyi(900 * f, 8, rng),
+        "nn": codebook_quantize(magnitude_prune(w, 0.85), bits=6),
+    }
+    skew = np.zeros((400 * f, 300 * f), dtype=np.float64)
+    lens = np.minimum(rng.zipf(1.7, size=skew.shape[0]), skew.shape[1])
+    for i, k in enumerate(lens):
+        cols = rng.choice(skew.shape[1], size=int(k), replace=False)
+        skew[i, cols] = np.round(rng.standard_normal(int(k))) + 0.5
+    out["skew"] = CSR.from_dense(skew)
+    return {k: CSR(v.indptr, v.indices, v.values.astype(np.float32),
+                   v.shape) if v.values.dtype != np.float32 else v
+            for k, v in out.items()}
+
+
+#: (fmt, lane_width, group_size) configurations measured per sweep
+#: matrix — one representative per work-term family.
+CALIBRATION_CONFIGS = (
+    ("csr", None, None),
+    ("sell", None, None),
+    ("rgcsr", None, 8),
+    ("dtans", 32, None),
+    ("rgcsr_dtans", None, 8),
+)
+
+
+def _exact_nbytes(a, fmt: str, *, lane_width=None, group_size=None,
+                  shared_table=True, params=PAPER,
+                  artifacts: dict | None = None) -> int:
+    """Byte-exact size of (format, config) on ``a`` — constructed, not
+    estimated, so calibration residuals are purely about time."""
+    from repro.sparse.formats import COO, SELL
+    from repro.sparse.rgcsr import rgcsr_nbytes_exact
+    if fmt == "csr":
+        return a.nbytes
+    if fmt == "coo":
+        return COO.from_csr(a).nbytes
+    if fmt == "sell":
+        return SELL.from_csr(a, slice_height=SELL_RUNNER_SLICE).nbytes
+    if fmt == "rgcsr":
+        return rgcsr_nbytes_exact(a.row_nnz(), group_size,
+                                  a.values.dtype.itemsize)
+    enc = artifacts if artifacts is not None else {}
+    # spmv_runner populated `artifacts` with the encoded object.
+    key = (fmt, int(lane_width if fmt == "dtans" else group_size),
+           bool(shared_table))
+    mat = enc.get(key)
+    if hasattr(mat, "nbytes"):
+        return int(mat.nbytes)
+    if fmt == "dtans":
+        from repro.core.csr_dtans import encode_matrix
+        return encode_matrix(a, params=params, lane_width=lane_width,
+                             shared_table=shared_table).nbytes
+    from repro.core.rgcsr_dtans import encode_rgcsr_matrix
+    return encode_rgcsr_matrix(a, group_size=group_size, params=params,
+                               shared_table=shared_table).nbytes
+
+
+def _clamped_lstsq(A: np.ndarray, t: np.ndarray,
+                   fallback: np.ndarray) -> np.ndarray:
+    """Least squares with non-negativity by clamp-and-refit: columns
+    whose coefficient comes out non-positive are pinned to their
+    ``fallback`` (base-model) value and the rest re-fit on the residual.
+    Five columns, so the loop is at most five rounds."""
+    beta = np.array(fallback, dtype=np.float64)
+    free = np.ones(A.shape[1], dtype=bool)
+    for _ in range(A.shape[1]):
+        if not free.any():
+            break
+        resid = t - A[:, ~free] @ beta[~free]
+        sol, *_ = np.linalg.lstsq(A[:, free], resid, rcond=None)
+        bad = sol <= 0
+        beta[free] = np.where(bad, fallback[free], sol)
+        if not bad.any():
+            break
+        idx = np.flatnonzero(free)
+        free[idx[bad]] = False
+    return beta
+
+
+def calibrate(matrices: dict | None = None, *, base: MachineModel = V5E,
+              name: str | None = None, warm: bool = True,
+              configs: tuple = CALIBRATION_CONFIGS,
+              params: DtansParams = PAPER, interpret: bool = True,
+              warmup: int = DEFAULT_WARMUP,
+              repeats: int = DEFAULT_REPEATS,
+              small: bool = True) -> CalibrationResult:
+    """Fit MachineModel constants from a measured microbench sweep.
+
+    Each measurement contributes one row of a linear system
+
+        t = miss_bytes/hbm_bw + hit_bytes/cache_bw
+            + (lockstep_work * c_ls + rowseq_work * c_rs
+               + decode_work * c_dec)
+
+    whose five coefficients map back to ``hbm_bw``, ``cache_bw``,
+    ``spmv_ops_per_elem``, ``row_seq_penalty`` and
+    ``decode_ops_per_nnz`` (``vpu_rate`` and ``cache_bytes`` stay at the
+    base model's datasheet values — they are not separately identifiable
+    from end-to-end times). Coefficients the data cannot pin down
+    positively fall back to the base model's value.
+
+    Returns a `CalibrationResult`; ``result.model`` is ready for
+    ``select(machine=...)`` and `save_profile`.
+    """
+    mats = _calibration_suite(small=small) if matrices is None else matrices
+    points: list[CalibrationPoint] = []
+    feats: list[list[float]] = []
+    meas: list[float] = []
+
+    for mname, a in mats.items():
+        fp = fingerprint(a, params=params)
+        enc: dict = {}
+        for fmt, w, g in configs:
+            t_meas = measure_config(
+                a, fmt, lane_width=w, group_size=g, params=params,
+                interpret=interpret, warmup=warmup, repeats=repeats,
+                artifacts=enc)
+            nbytes = _exact_nbytes(a, fmt, lane_width=w, group_size=g,
+                                   params=params, artifacts=enc)
+            width = g if fmt in ("rgcsr", "rgcsr_dtans") else (
+                w if fmt == "dtans" else SELL_RUNNER_SLICE)
+            work = (fp.lockstep(width) if fmt in LOCKSTEP_FORMATS
+                    else fp.nnz)
+            moved = spmv_bytes(nbytes, fp.cols, fp.rows, fp.value_bytes)
+            hit = min(moved, base.cache_bytes) if warm else 0.0
+            feats.append([
+                moved - hit,                                  # 1/hbm_bw
+                hit,                                          # 1/cache_bw
+                work if fmt in LOCKSTEP_FORMATS else 0.0,     # c_ls
+                work if fmt in ("csr", "coo") else 0.0,       # c_rs
+                work if fmt in DECODE_FORMATS else 0.0,       # c_dec
+            ])
+            meas.append(t_meas)
+            t_before = candidate_time(fp, fmt, nbytes, warm=warm,
+                                      machine=base, lane_width=w,
+                                      group_size=g)
+            cname = Candidate(fmt=fmt, nbytes=nbytes, modeled_time=0.0,
+                              exact_size=True, lane_width=w,
+                              shared_table=True,
+                              group_size=g).config_name
+            points.append(CalibrationPoint(
+                matrix=mname, config_name=cname, fmt=fmt, nbytes=nbytes,
+                work_elems=int(work), measured=t_meas,
+                modeled_before=t_before))
+
+    A = np.asarray(feats, dtype=np.float64)
+    t = np.asarray(meas, dtype=np.float64)
+    fallback = np.array([
+        1.0 / base.hbm_bw,
+        1.0 / base.cache_bw,
+        base.spmv_ops_per_elem / base.vpu_rate,
+        base.spmv_ops_per_elem * base.row_seq_penalty / base.vpu_rate,
+        base.decode_ops_per_nnz / base.vpu_rate,
+    ])
+    beta = _clamped_lstsq(A, t, fallback)
+
+    hbm_bw = 1.0 / beta[0]
+    cache_bw = max(1.0 / beta[1], hbm_bw)   # cache never slower than HBM
+    ops_per_elem = beta[2] * base.vpu_rate
+    fitted = MachineModel(
+        name=name or f"{base.name}-calibrated",
+        hbm_bw=hbm_bw, cache_bw=cache_bw, cache_bytes=base.cache_bytes,
+        vpu_rate=base.vpu_rate,
+        decode_ops_per_nnz=beta[4] * base.vpu_rate,
+        spmv_ops_per_elem=ops_per_elem,
+        row_seq_penalty=max(beta[3] / beta[2], 1.0),
+    )
+
+    pred_after = A @ beta
+    done = []
+    err_b, err_a = [], []
+    for p, t_after in zip(points, pred_after):
+        done.append(dataclasses.replace(p, modeled_after=float(t_after)))
+        err_b.append(abs(p.modeled_before - p.measured) / p.measured)
+        err_a.append(abs(t_after - p.measured) / p.measured)
+    return CalibrationResult(model=fitted,
+                             err_before=float(np.mean(err_b)),
+                             err_after=float(np.mean(err_a)),
+                             points=tuple(done))
+
+
+# --------------------------------------------------------------------------
+# Named machine profiles (JSON beside the decision cache)
+# --------------------------------------------------------------------------
+
+
+def default_profiles_path() -> str:
+    """``$REPRO_MACHINE_PROFILES`` if set, else ``machine_profiles.json``
+    next to the decision cache."""
+    env = os.environ.get(_PROFILE_ENV)
+    if env:
+        return env
+    return os.path.join(os.path.dirname(default_cache_path()),
+                        "machine_profiles.json")
+
+
+def save_profile(model: MachineModel, *, meta: dict | None = None,
+                 path: str | os.PathLike | None = None) -> str:
+    """Persist ``model`` under its name; returns the profile file path.
+
+    Concurrent savers merge (read + update + atomic rename, same
+    discipline as the decision cache); saving raises on an unwritable
+    path — losing a profile silently would quietly serve decisions
+    tuned for the wrong constants.
+    """
+    p = os.fspath(path) if path is not None else default_profiles_path()
+    entry = {"model": model.to_dict(), "meta": dict(meta or {}),
+             "signature": model.signature()}
+    atomic_merge_json(p, {model.name: entry}, strict=True)
+    return p
+
+
+def load_profile(name: str, *,
+                 path: str | os.PathLike | None = None) -> MachineModel:
+    """Load a named profile; raises KeyError when absent."""
+    p = os.fspath(path) if path is not None else default_profiles_path()
+    try:
+        with open(p) as f:
+            data = json.load(f)
+    except (OSError, ValueError) as e:
+        raise KeyError(f"no machine profiles at {p}: {e}") from e
+    if name not in data:
+        raise KeyError(f"no machine profile {name!r} in {p} "
+                       f"(have: {sorted(data)})")
+    return MachineModel.from_dict(data[name]["model"])
+
+
+def list_profiles(path: str | os.PathLike | None = None) -> dict:
+    """name -> profile entry (empty when the file is absent/corrupt)."""
+    p = os.fspath(path) if path is not None else default_profiles_path()
+    try:
+        with open(p) as f:
+            data = json.load(f)
+        return data if isinstance(data, dict) else {}
+    except (OSError, ValueError):
+        return {}

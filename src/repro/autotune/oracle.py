@@ -35,9 +35,13 @@ def oracle_times(a, *, warm: bool = True, machine: MachineModel = V5E,
                  encode_cache: dict | None = None) -> dict[str, float]:
     """config_name -> exact-size modeled seconds, for every candidate.
 
-    ``encode_cache`` (any mutable mapping) memoizes the expensive
-    dtANS encodes across repeated calls (e.g. warm and cold evaluation
-    of the same matrix); keys are (family, width/G, shared).
+    ``encode_cache`` (any mutable mapping) memoizes the expensive dtANS
+    encodes across repeated calls (e.g. warm and cold evaluation of the
+    same matrix); keys are (family, width/G, shared), values the encoded
+    matrices themselves — `repro.autotune.measure.spmv_runner` and
+    `search.select(artifacts=...)` share the same convention, so a
+    measurement pass after an oracle run never re-encodes. (Legacy
+    caches holding bare byte counts are transparently re-encoded.)
     """
     from repro.core.csr_dtans import encode_matrix
     from repro.core.rgcsr_dtans import encode_rgcsr_matrix
@@ -61,18 +65,22 @@ def oracle_times(a, *, warm: bool = True, machine: MachineModel = V5E,
     for w in lane_widths:
         for shared in DTANS_SHARED_TABLE:
             key = ("dtans", w, shared)
-            if key not in enc:
-                enc[key] = encode_matrix(a, params=params, lane_width=w,
-                                         shared_table=shared).nbytes
+            mat = enc.get(key)
+            if not hasattr(mat, "nbytes"):   # miss or legacy int entry
+                mat = encode_matrix(a, params=params, lane_width=w,
+                                    shared_table=shared)
+                enc[key] = mat
             times[dtans_config_name(w, shared)] = t(
-                "dtans", enc[key], lane_width=w)
+                "dtans", mat.nbytes, lane_width=w)
     for g in group_sizes:
         key = ("rgcsr_dtans", g, True)
-        if key not in enc:
-            enc[key] = encode_rgcsr_matrix(a, group_size=g, params=params,
-                                           shared_table=True).nbytes
+        mat = enc.get(key)
+        if not hasattr(mat, "nbytes"):
+            mat = encode_rgcsr_matrix(a, group_size=g, params=params,
+                                      shared_table=True)
+            enc[key] = mat
         times[rgcsr_dtans_config_name(g, True)] = t(
-            "rgcsr_dtans", enc[key], group_size=g)
+            "rgcsr_dtans", mat.nbytes, group_size=g)
     return times
 
 

@@ -18,7 +18,12 @@ calls cheap:
 
 The ``budget`` knob bounds the expensive part: 0 = estimates only
 (default, pure fingerprint arithmetic), k > 0 = encode/construct the k
-best candidates for exact sizes before the final argmin.
+best candidates for exact sizes before the final argmin. Adding
+``measure=True`` upgrades that refinement pass from exact *sizes* to
+exact *times*: the top-k candidates are packed and their real kernels
+wall-clock timed (`repro.autotune.measure`), the argmin ranks measured
+seconds, and the winning measurement lands in ``Decision.measured_time``
+next to its ``modeled_time``.
 """
 
 from __future__ import annotations
@@ -52,8 +57,14 @@ class Decision:
     fingerprint_key: str
     refined: bool
     group_size: int | None = None    # rgcsr family only
-    # (config_name, nbytes, modeled_time) of the best few candidates,
-    # cheapest first — kept for regret reporting and debugging.
+    # Median wall-clock seconds of the winner's real kernel when the
+    # selection ran with ``measure=True``; None for modeled-only runs.
+    # Modeled and measured seconds are different currencies (interpret
+    # mode vs the machine model) — compare measured against measured.
+    measured_time: float | None = None
+    # (config_name, nbytes, modeled_time, measured_time | None) of the
+    # best few candidates, best first — kept for regret reporting and
+    # debugging.
     leaderboard: tuple = ()
 
     @property
@@ -78,11 +89,16 @@ class Decision:
     @classmethod
     def from_dict(cls, d: dict) -> "Decision":
         """Raises ValueError on schema drift (old/foreign cache files);
-        `select` treats that as a cache miss and recomputes."""
+        `select` treats that as a cache miss and recomputes. Fields with
+        defaults (``measured_time``, ``group_size``, ...) may be absent —
+        a cache written before a field existed stays valid."""
         fields = {f.name for f in dataclasses.fields(cls)}
-        if not fields <= set(d) | {"leaderboard"}:
+        required = {f.name for f in dataclasses.fields(cls)
+                    if f.default is dataclasses.MISSING
+                    and f.default_factory is dataclasses.MISSING}
+        if not required <= set(d):
             raise ValueError(f"missing decision fields: "
-                             f"{sorted(fields - set(d))}")
+                             f"{sorted(required - set(d))}")
         d = {k: v for k, v in d.items() if k in fields}
         d["leaderboard"] = tuple(tuple(row) for row in
                                  d.get("leaderboard", ()))
@@ -102,19 +118,35 @@ def clear_memo() -> None:
 
 
 def _refine(a, cand: Candidate, fp: Fingerprint, *, warm: bool,
-            machine: MachineModel, params: DtansParams) -> Candidate:
-    """Replace an estimated candidate size with the constructed truth."""
+            machine: MachineModel, params: DtansParams,
+            artifacts: dict) -> Candidate:
+    """Replace an estimated candidate size with the constructed truth.
+
+    ``artifacts`` memoizes encoded matrices under the oracle's
+    ``(family, width/G, shared)`` keys so a later measurement pass (or a
+    caller that already ran the oracle) never re-encodes."""
     if cand.exact_size:
         return cand
     if cand.fmt == "dtans":
         from repro.core.csr_dtans import encode_matrix
-        b = encode_matrix(a, params=params, lane_width=cand.lane_width,
-                          shared_table=cand.shared_table).nbytes
+        key = ("dtans", cand.lane_width, cand.shared_table)
+        mat = artifacts.get(key)
+        if not hasattr(mat, "nbytes"):       # miss or legacy int entry
+            mat = encode_matrix(a, params=params,
+                                lane_width=cand.lane_width,
+                                shared_table=cand.shared_table)
+            artifacts[key] = mat
+        b = mat.nbytes
     elif cand.fmt == "rgcsr_dtans":
         from repro.core.rgcsr_dtans import encode_rgcsr_matrix
-        b = encode_rgcsr_matrix(a, group_size=cand.group_size,
-                                params=params,
-                                shared_table=cand.shared_table).nbytes
+        key = ("rgcsr_dtans", cand.group_size, cand.shared_table)
+        mat = artifacts.get(key)
+        if not hasattr(mat, "nbytes"):
+            mat = encode_rgcsr_matrix(a, group_size=cand.group_size,
+                                      params=params,
+                                      shared_table=cand.shared_table)
+            artifacts[key] = mat
+        b = mat.nbytes
     elif cand.fmt == "rgcsr":
         # Estimated only for group sizes outside RGCSR_GROUP_SIZES
         # (fingerprint lacks their group-nnz feature); the histogram
@@ -133,12 +165,15 @@ def _refine(a, cand: Candidate, fp: Fingerprint, *, warm: bool,
 
 def select(a, *, machine: MachineModel = V5E, warm: bool = True,
            formats: tuple = ALL_FORMATS, budget: int = 0,
+           measure: bool = False, measure_warmup: int = 1,
+           measure_repeats: int = 3, interpret: bool = True,
            params: DtansParams = PAPER,
            lane_widths: tuple = DTANS_LANE_WIDTHS,
            group_sizes: tuple = RGCSR_GROUP_SIZES,
            cache: DecisionCache | None = None,
-           use_cache: bool = True) -> Decision:
-    """Pick the modeled-fastest format for CSR matrix ``a``.
+           use_cache: bool = True,
+           artifacts: dict | None = None) -> Decision:
+    """Pick the modeled- (or measured-) fastest format for matrix ``a``.
 
     Args:
       a: `repro.sparse.formats.CSR` matrix.
@@ -147,18 +182,37 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
       formats: candidate format families to consider.
       budget: number of top estimated candidates to construct for exact
         sizes before the final argmin (0 = fingerprint estimates only).
+      measure: with ``budget > 0``, additionally wall-clock time the
+        top-``budget`` candidates' real kernels
+        (`repro.autotune.measure`) and rank them by measured seconds;
+        the winner always comes from the measured head (modeled tail
+        times are a different currency). The winning measurement lands
+        in ``Decision.measured_time``.
+      measure_warmup / measure_repeats: timing harness knobs
+        (median-of-``measure_repeats`` after ``measure_warmup`` calls).
+      interpret: run measured kernels in Pallas interpret mode (CPU CI
+        fallback); pass ``False`` on an accelerator host.
       group_sizes: RGCSR group sizes swept for the rgcsr families.
       cache: decision cache; ``None`` uses the process default
         (persistent on disk). Pass ``DecisionCache(path=None)`` for a
         memory-only cache.
       use_cache: disable both cache layers (for measurement).
+      artifacts: optional mutable mapping memoizing encoded matrices
+        under the oracle's ``(family, width/G, shared)`` keys; callers
+        that already encoded candidates (benchmarks, the oracle) pass
+        theirs to skip re-encoding. Never part of the cache key.
     """
+    if measure and budget <= 0:
+        raise ValueError("measure=True requires budget > 0 (only the "
+                         "refined head is packed and timed)")
     cache = cache if cache is not None else default_cache()
     # The cache object is part of the memo key: a repeat select with a
     # *different* cache must consult (and populate) that cache, not
     # short-circuit on the memo.
     cfg = (machine, warm, tuple(formats), int(budget),
-           tuple(lane_widths), tuple(group_sizes), params, cache)
+           tuple(lane_widths), tuple(group_sizes), params, cache,
+           bool(measure), int(measure_warmup), int(measure_repeats),
+           bool(interpret))
     if use_cache:
         hit = _memo.get(id(a))
         if hit is not None and hit[0]() is a and hit[1] == cfg:
@@ -166,12 +220,19 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
 
     fp = fingerprint(a, params=params)
     pp = params
-    key = "|".join([fp.key(), machine.signature(), f"warm={int(warm)}",
-                    ",".join(formats), f"budget={int(budget)}",
-                    ",".join(str(w) for w in lane_widths),
-                    "G" + ",".join(str(g) for g in group_sizes),
-                    f"w{pp.w_bits}k{pp.k_bits}l{pp.l}o{pp.o}"
-                    f"f{pp.f}m{pp.m_bits}"])
+    key_parts = [fp.key(), machine.signature(), f"warm={int(warm)}",
+                 ",".join(formats), f"budget={int(budget)}",
+                 ",".join(str(w) for w in lane_widths),
+                 "G" + ",".join(str(g) for g in group_sizes),
+                 f"w{pp.w_bits}k{pp.k_bits}l{pp.l}o{pp.o}"
+                 f"f{pp.f}m{pp.m_bits}"]
+    if measure:
+        # Measured decisions key separately from modeled ones (and by
+        # harness knobs): the currencies must never be mixed by a
+        # cache hit.
+        key_parts.append(f"meas:w{int(measure_warmup)}"
+                         f"r{int(measure_repeats)}i{int(interpret)}")
+    key = "|".join(key_parts)
     if use_cache:
         raw = cache.get(key)
         if raw is not None:
@@ -188,10 +249,29 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
                        group_sizes=tuple(group_sizes))
     refined = False
     if budget > 0:
+        arts = artifacts if artifacts is not None else {}
         head = [_refine(a, c, fp, warm=warm, machine=machine,
-                        params=params) for c in cands[:budget]]
+                        params=params, artifacts=arts)
+                for c in cands[:budget]]
         refined = any(h is not c for h, c in zip(head, cands))
-        cands = sorted(head + cands[budget:], key=lambda c: c.modeled_time)
+        if measure:
+            from repro.autotune.measure import measure_candidate
+            head = [dataclasses.replace(
+                        h, measured_time=measure_candidate(
+                            a, h, params=params, interpret=interpret,
+                            warmup=measure_warmup,
+                            repeats=measure_repeats, artifacts=arts))
+                    for h in head]
+            refined = True
+            # Measured head ranks by wall clock; the unmeasured tail
+            # keeps its modeled order *behind* the head — a modeled
+            # tail time is not comparable to a measured second, so the
+            # tail can never outrank a measured candidate.
+            head.sort(key=lambda c: c.measured_time)
+            cands = head + cands[budget:]
+        else:
+            cands = sorted(head + cands[budget:],
+                           key=lambda c: c.modeled_time)
 
     best = cands[0]
     dec = Decision(
@@ -200,8 +280,9 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
         modeled_time=best.modeled_time, exact_size=best.exact_size,
         warm=warm, machine=machine.name, fingerprint_key=fp.key(),
         refined=refined, group_size=best.group_size,
-        leaderboard=tuple((c.config_name, c.nbytes, c.modeled_time)
-                          for c in cands[:5]),
+        measured_time=best.measured_time,
+        leaderboard=tuple((c.config_name, c.nbytes, c.modeled_time,
+                           c.measured_time) for c in cands[:5]),
     )
     if use_cache:
         cache.put(key, dec.to_dict())
@@ -214,18 +295,23 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
 
 def choose_dtans_config(a, *, machine: MachineModel = V5E,
                         warm: bool = True, budget: int = 0,
+                        measure: bool = False, interpret: bool = True,
                         params: DtansParams = PAPER,
                         cache: DecisionCache | None = None,
-                        use_cache: bool = True) -> Decision:
+                        use_cache: bool = True,
+                        artifacts: dict | None = None) -> Decision:
     """Best entropy-coded configuration only: CSR-dtANS (lane width x
     table sharing) or group-aligned RGCSR-dtANS (group size).
 
     Used by `repro.serving.sparse_linear.SparseLinear`'s ``auto=True``
     path, where the family must decode on the fly but the knobs are
     free. Both families run the same decode kernels, so the serving
-    stack is indifferent to which one wins.
+    stack is indifferent to which one wins. ``measure=True`` (with
+    ``budget > 0``) times the candidates' real kernels, exactly as in
+    `select`.
     """
     return select(a, machine=machine, warm=warm,
                   formats=("dtans", "rgcsr_dtans"),
-                  budget=budget, params=params, cache=cache,
-                  use_cache=use_cache)
+                  budget=budget, measure=measure, interpret=interpret,
+                  params=params, cache=cache,
+                  use_cache=use_cache, artifacts=artifacts)

@@ -21,8 +21,12 @@ from repro.kernels.sell_spmv import PackedSELL, sell_spmv_pallas
 _PACK_CACHE_FIELD = "_packed_cache"
 
 
-def _out_dtype(pm: PackedMatrix):
+def out_dtype(pm: PackedMatrix):
+    """Accumulator dtype of the decode kernels for a packed matrix."""
     return jnp.float64 if pm.dtype == np.float64 else jnp.float32
+
+
+_out_dtype = out_dtype   # backwards-compatible alias
 
 
 def get_packed(mat: CSRdtANS) -> PackedMatrix:
@@ -67,20 +71,34 @@ def decode(mat: CSRdtANS | PackedMatrix, *, interpret: bool = True):
         lane_width=pm.lane_width, out_dtype=dt, interpret=interpret)
 
 
-def sell_spmv(ps: PackedSELL, x, *, interpret: bool = True) -> jax.Array:
-    """Baseline SELL SpMVM: y = A x."""
+def sell_spmv(ps: PackedSELL, x, y=None, *,
+              interpret: bool = True) -> jax.Array:
+    """Baseline SELL SpMVM: y = A x + y.
+
+    Same ``(mat, x, y=None)`` signature as `spmv` / `rgcsr_spmv` — the
+    timing harness (`repro.autotune.measure`) and the conformance suite
+    drive all three entry points interchangeably."""
     m, _ = ps.shape
     acc = sell_spmv_pallas(jnp.asarray(ps.indices), jnp.asarray(ps.values),
                            jnp.asarray(x, dtype=ps.values.dtype),
                            interpret=interpret)
-    return acc.reshape(-1)[:m]
+    out = acc.reshape(-1)[:m]
+    if y is not None:
+        out = out + jnp.asarray(y, dtype=out.dtype)
+    return out
 
 
-def rgcsr_spmv(pr: PackedRGCSR, x, *, interpret: bool = True) -> jax.Array:
-    """Row-grouped CSR SpMVM: y = A x (delta prefix-sum in kernel)."""
+def rgcsr_spmv(pr: PackedRGCSR, x, y=None, *,
+               interpret: bool = True) -> jax.Array:
+    """Row-grouped CSR SpMVM: y = A x + y (delta prefix-sum in kernel).
+
+    Shares the `spmv` / `sell_spmv` signature; see `sell_spmv`."""
     m, _ = pr.shape
     acc = rgcsr_spmv_pallas(jnp.asarray(pr.deltas), jnp.asarray(pr.values),
                             jnp.asarray(pr.nnz),
                             jnp.asarray(x, dtype=pr.values.dtype),
                             interpret=interpret)
-    return acc.reshape(-1)[:m]
+    out = acc.reshape(-1)[:m]
+    if y is not None:
+        out = out + jnp.asarray(y, dtype=out.dtype)
+    return out

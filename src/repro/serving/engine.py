@@ -57,9 +57,22 @@ class Engine:
     @classmethod
     def compress_lm_head(cls, cfg, params, sparsity=0.8,
                          **kw) -> SparseLinear:
+        """Compress the LM head of ``params`` into a `SparseLinear`.
+
+        Resolves the head weight the same way `models.layers.lm_head`
+        does (untied ``head`` or tied ``tok.T``), validates its shape
+        against ``cfg`` (a mismatched config would silently compress the
+        wrong projection), and hands the weight over in its *source*
+        dtype — `SparseLinear.from_dense` preserves float32/float64 end
+        to end, so a float64 head serves float64 logits.
+        """
         emb = params["embed"]
-        w = np.asarray(emb["head"] if "head" in emb
-                       else emb["tok"].T, dtype=np.float32)  # (d, vocab)
+        w = np.asarray(emb["head"]) if "head" in emb \
+            else np.asarray(emb["tok"]).T                # (d, vocab)
+        if cfg is not None and w.shape != (cfg.d_model, cfg.vocab):
+            raise ValueError(
+                f"LM head shape {w.shape} does not match config "
+                f"(d_model={cfg.d_model}, vocab={cfg.vocab})")
         return SparseLinear.from_dense(w, sparsity=sparsity, **kw)
 
     def _head(self, hidden):

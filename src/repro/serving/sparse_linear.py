@@ -41,8 +41,15 @@ class SparseLinear:
                    value_bits: int = 8, lane_width: int = 128,
                    shared_table: bool = True, auto: bool = False,
                    autotune_budget: int = 0,
-                   autotune_cache=None) -> "SparseLinear":
+                   autotune_cache=None,
+                   autotune_measure: bool = False,
+                   autotune_machine=None) -> "SparseLinear":
         """Compress a dense projection for decode-on-the-fly serving.
+
+        The source dtype is preserved end-to-end: a float64 projection
+        prunes, quantizes, encodes and decodes in float64 (non-float
+        inputs fall back to float32 — the format codes float bit
+        patterns).
 
         With ``auto=True`` the ``lane_width`` / ``shared_table`` knobs are
         ignored and chosen per matrix by `repro.autotune` (fingerprint the
@@ -52,19 +59,29 @@ class SparseLinear:
         decisions persist in the autotune cache, so repeated serving runs
         skip the search). ``autotune_budget`` > 0 additionally encodes the
         top candidates to refine estimated sizes into exact ones;
-        ``autotune_cache`` overrides the default persistent cache (pass
-        ``repro.autotune.DecisionCache(path=None)`` for memory-only).
+        ``autotune_measure=True`` further wall-clock times those
+        candidates' decode kernels and picks the measured-fastest
+        (`repro.autotune.measure`); ``autotune_machine`` substitutes a
+        calibrated `MachineModel` (e.g. ``load_profile(...)``) for the
+        default v5e constants; ``autotune_cache`` overrides the default
+        persistent cache (pass ``repro.autotune.DecisionCache(path=None)``
+        for memory-only).
         """
         d_in, d_out = w.shape
-        pruned = magnitude_prune(np.asarray(w, dtype=np.float32).T,
-                                 sparsity)
+        w_arr = np.asarray(w)
+        if w_arr.dtype not in (np.float32, np.float64):
+            w_arr = w_arr.astype(np.float32)
+        pruned = magnitude_prune(w_arr.T, sparsity)
         pruned = codebook_quantize(pruned, bits=value_bits)
         decision = None
         if auto:
-            from repro.autotune import choose_dtans_config
-            decision = choose_dtans_config(pruned, warm=True,
-                                           budget=autotune_budget,
-                                           cache=autotune_cache)
+            from repro.autotune import V5E, choose_dtans_config
+            decision = choose_dtans_config(
+                pruned, warm=True, budget=autotune_budget,
+                measure=autotune_measure,
+                machine=autotune_machine
+                if autotune_machine is not None else V5E,
+                cache=autotune_cache)
             lane_width = decision.lane_width
             shared_table = decision.shared_table
         if decision is not None and decision.fmt == "rgcsr_dtans":
@@ -97,10 +114,14 @@ class SparseLinear:
 
         Batched contraction against the decoded sparse matrix: decode once
         (cols, vals), gather x at cols, reduce — the SpMM generalization of
-        the paper's SpMVM kernel (one x per request in the batch).
+        the paper's SpMVM kernel (one x per request in the batch). Both
+        paths accumulate in the packed matrix's dtype (`ops.out_dtype`) —
+        a float64 weight is contracted in float64, matching the
+        single-vector SpMV path.
         """
+        dt = ops.out_dtype(self.packed)
         lead = x.shape[:-1]
-        xb = jnp.asarray(x, dtype=jnp.float32).reshape(-1, self.d_in)
+        xb = jnp.asarray(x, dtype=dt).reshape(-1, self.d_in)
         if xb.shape[0] == 1:
             y = ops.spmv(self.packed, xb[0], interpret=interpret)[None]
         else:
@@ -114,8 +135,9 @@ class SparseLinear:
         return y.reshape(*lead, self.d_out).astype(x.dtype)
 
     def apply_dense_reference(self, x):
-        """Oracle: decode to dense and matmul (tests)."""
+        """Oracle: decode to dense and matmul (tests). Contracts in the
+        matrix dtype, like `apply`."""
         from repro.core.csr_dtans import decode_matrix
         w = decode_matrix(self.mat).to_dense()   # (d_out, d_in)
-        return (jnp.asarray(x) @ jnp.asarray(w, dtype=jnp.float32).T
+        return (jnp.asarray(x, dtype=w.dtype) @ jnp.asarray(w).T
                 ).astype(x.dtype)

@@ -208,6 +208,30 @@ class TestCache:
         c.put("x", {"a": 1})        # and it heals on write
         assert DecisionCache(path=p).get("x") == {"a": 1}
 
+    def test_interleaved_writers_merge(self, tmp_path):
+        """Two processes sharing one cache file must union their keys:
+        the second writer re-reads the disk under its atomic rename
+        instead of clobbering it with its own memo."""
+        p = tmp_path / "shared.json"
+        c1, c2 = DecisionCache(path=p), DecisionCache(path=p)
+        assert c1.get("x") is None        # both memos load pre-write
+        assert c2.get("x") is None
+        c1.put("k1", {"fmt": "csr"})
+        c2.put("k2", {"fmt": "sell"})     # unaware of k1 until now
+        fresh = DecisionCache(path=p)
+        assert fresh.get("k1") == {"fmt": "csr"}
+        assert fresh.get("k2") == {"fmt": "sell"}
+        # the merging writer also adopted the other process's key
+        assert c2.get("k1") == {"fmt": "csr"}
+
+    def test_interleaved_writers_last_write_wins_per_key(self, tmp_path):
+        p = tmp_path / "shared.json"
+        c1, c2 = DecisionCache(path=p), DecisionCache(path=p)
+        c1.get("x"), c2.get("x")
+        c1.put("k", {"fmt": "csr"})
+        c2.put("k", {"fmt": "sell"})
+        assert DecisionCache(path=p).get("k") == {"fmt": "sell"}
+
     def test_unwritable_path_degrades_to_memory(self, tmp_path):
         ro = tmp_path / "ro"
         ro.mkdir()

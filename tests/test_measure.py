@@ -1,0 +1,271 @@
+"""Tests for repro.autotune.measure: the kernel-timing harness, the
+measured-refinement path of select(), MachineModel calibration, and
+named machine profiles (persistence + cache-key invalidation)."""
+
+import numpy as np
+import pytest
+
+from repro.autotune import (DecisionCache, V5E, MachineModel, calibrate,
+                            clear_memo, dtans_config_name, list_profiles,
+                            load_profile, measure_named,
+                            parse_config_name, rgcsr_config_name,
+                            rgcsr_dtans_config_name, save_profile, select,
+                            spmv_runner, time_kernel)
+from repro.sparse.formats import CSR
+from repro.sparse.random_graphs import banded, erdos_renyi
+
+
+def _f32(a: CSR) -> CSR:
+    return CSR(a.indptr, a.indices, a.values.astype(np.float32), a.shape)
+
+
+def _small(seed: int = 2) -> CSR:
+    return _f32(erdos_renyi(220, 5, np.random.default_rng(seed)))
+
+
+class TestHarness:
+    def test_time_kernel_counts_calls_and_is_positive(self):
+        import jax.numpy as jnp
+        calls = []
+
+        def fn():
+            calls.append(1)
+            return jnp.zeros(())
+
+        t = time_kernel(fn, warmup=2, repeats=3)
+        assert len(calls) == 5
+        assert t > 0.0
+
+    def test_time_kernel_rejects_zero_repeats(self):
+        with pytest.raises(ValueError):
+            time_kernel(lambda: None, repeats=0)
+
+    @pytest.mark.parametrize("fmt,kw", [
+        ("csr", {}),
+        ("coo", {}),
+        ("dense", {}),
+        ("sell", {}),
+        ("rgcsr", {"group_size": 8}),
+        ("dtans", {"lane_width": 32}),
+        ("rgcsr_dtans", {"group_size": 8}),
+    ])
+    def test_runner_output_matches_dense(self, fmt, kw):
+        """Every registered runner computes y = A x — a timing harness
+        that measures a wrong kernel measures nothing."""
+        a = _small()
+        x = np.random.default_rng(0).standard_normal(
+            a.shape[1]).astype(np.float32)
+        got = np.asarray(spmv_runner(a, fmt, x=x, **kw)())
+        want = a.to_dense() @ x
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_unknown_format_raises(self):
+        with pytest.raises(ValueError):
+            spmv_runner(_small(), "blocked_ellpack")
+
+    def test_artifacts_memoize_encodes(self):
+        a = _small()
+        arts: dict = {}
+        spmv_runner(a, "dtans", lane_width=32, artifacts=arts)
+        mat = arts[("dtans", 32, True)]
+        spmv_runner(a, "dtans", lane_width=32, artifacts=arts)
+        assert arts[("dtans", 32, True)] is mat
+
+    def test_parse_config_name_roundtrip(self):
+        assert parse_config_name("csr") == {"fmt": "csr"}
+        assert parse_config_name(dtans_config_name(32, False)) == {
+            "fmt": "dtans", "lane_width": 32, "shared_table": False}
+        assert parse_config_name(rgcsr_config_name(8)) == {
+            "fmt": "rgcsr", "group_size": 8}
+        assert parse_config_name(rgcsr_dtans_config_name(16, True)) == {
+            "fmt": "rgcsr_dtans", "group_size": 16, "shared_table": True}
+        with pytest.raises(ValueError):
+            parse_config_name("alphasparse")
+
+    def test_measure_named(self):
+        t = measure_named(_small(), "sell", warmup=0, repeats=1)
+        assert t > 0.0
+
+
+class TestMeasuredSelect:
+    def test_measure_requires_budget(self):
+        with pytest.raises(ValueError):
+            select(_small(), measure=True,
+                   cache=DecisionCache(path=None))
+
+    def test_measured_decision_fields(self):
+        a = _small(3)
+        clear_memo()
+        dec = select(a, budget=2, measure=True, measure_warmup=0,
+                     measure_repeats=1, cache=DecisionCache(path=None))
+        assert dec.measured_time is not None and dec.measured_time > 0
+        assert dec.refined
+        # The winner leads the leaderboard and carries its measurement
+        # in the 4th slot; measured rows rank by wall clock.
+        assert dec.leaderboard[0][0] == dec.config_name
+        assert dec.leaderboard[0][3] == dec.measured_time
+        measured_rows = [r for r in dec.leaderboard if r[3] is not None]
+        assert len(measured_rows) == 2
+        assert measured_rows[0][3] <= measured_rows[1][3]
+
+    def test_measured_and_modeled_key_separately(self):
+        """A measured decision must never be served for a modeled query
+        (different currencies) — distinct cache keys."""
+        a = _small(4)
+        cache = DecisionCache(path=None)
+        clear_memo()
+        select(a, budget=2, cache=cache)
+        select(a, budget=2, measure=True, measure_warmup=0,
+               measure_repeats=1, cache=cache)
+        assert len(cache) == 2
+
+    def test_measured_decision_cached_without_remeasure(self, monkeypatch):
+        a = _small(5)
+        cache = DecisionCache(path=None)
+        clear_memo()
+        d1 = select(a, budget=2, measure=True, measure_warmup=0,
+                    measure_repeats=1, cache=cache)
+        from repro.autotune import measure as measure_mod
+
+        def boom(*a, **kw):
+            raise AssertionError("cache hit must not re-measure")
+
+        monkeypatch.setattr(measure_mod, "measure_candidate", boom)
+        clear_memo()                      # force the disk-cache path
+        d2 = select(a, budget=2, measure=True, measure_warmup=0,
+                    measure_repeats=1, cache=cache)
+        assert d2 == d1
+        assert d2.measured_time == d1.measured_time
+
+
+class TestCalibration:
+    def _mats(self):
+        rng = np.random.default_rng(6)
+        return {"er": _f32(erdos_renyi(260, 5, rng)),
+                "banded": _f32(banded(500, 4))}
+
+    def test_fit_shrinks_error_and_changes_signature(self):
+        res = calibrate(self._mats(), warmup=0, repeats=1)
+        # In-sample, the fitted constants must beat the hand-tuned
+        # defaults (the modeled currency is orders of magnitude off the
+        # interpret-mode harness; calibration's whole job is closing
+        # that gap).
+        assert res.err_after < res.err_before
+        assert res.model.signature() != V5E.signature()
+        assert res.model.name == "v5e-calibrated"
+        # Fitted constants stay physical.
+        assert res.model.hbm_bw > 0
+        assert res.model.cache_bw >= res.model.hbm_bw
+        assert res.model.spmv_ops_per_elem > 0
+        assert res.model.row_seq_penalty >= 1.0
+        # Fixed datasheet terms are inherited, not fit.
+        assert res.model.cache_bytes == V5E.cache_bytes
+        assert res.model.vpu_rate == V5E.vpu_rate
+
+    def test_points_and_dict_shape(self):
+        res = calibrate(self._mats(), warmup=0, repeats=1)
+        assert len(res.points) == 2 * 5     # matrices x configs
+        d = res.to_dict()
+        assert set(d) == {"model", "err_before", "err_after", "points"}
+        assert all(np.isfinite(p.modeled_after) for p in res.points)
+
+    def test_calibrated_model_drives_select(self):
+        res = calibrate(self._mats(), warmup=0, repeats=1)
+        cache = DecisionCache(path=None)
+        a = _small(7)
+        clear_memo()
+        d1 = select(a, cache=cache)
+        d2 = select(a, machine=res.model, cache=cache)
+        assert len(cache) == 2       # distinct keys: stale-proof
+        assert d2.machine == res.model.name
+        assert d1.machine == V5E.name
+
+
+class TestProfiles:
+    def _model(self, name="prof-test"):
+        return MachineModel(name=name, hbm_bw=1e11, cache_bw=4e11,
+                            cache_bytes=1e6, vpu_rate=1e12,
+                            decode_ops_per_nnz=20.0,
+                            spmv_ops_per_elem=2.0, row_seq_penalty=4.0)
+
+    def test_save_load_roundtrip(self, tmp_path):
+        p = tmp_path / "profiles.json"
+        m = self._model()
+        assert save_profile(m, meta={"src": "test"}, path=p) == str(p)
+        assert load_profile("prof-test", path=p) == m
+        entry = list_profiles(p)["prof-test"]
+        assert entry["meta"] == {"src": "test"}
+        assert entry["signature"] == m.signature()
+
+    def test_saves_merge_per_name(self, tmp_path):
+        p = tmp_path / "profiles.json"
+        save_profile(self._model("a"), path=p)
+        save_profile(self._model("b"), path=p)
+        assert set(list_profiles(p)) == {"a", "b"}
+
+    def test_load_missing_raises(self, tmp_path):
+        with pytest.raises(KeyError):
+            load_profile("nope", path=tmp_path / "absent.json")
+        save_profile(self._model("a"), path=tmp_path / "p.json")
+        with pytest.raises(KeyError):
+            load_profile("nope", path=tmp_path / "p.json")
+
+    def test_save_strict_on_unwritable_path(self, tmp_path, monkeypatch):
+        """Unlike the decision cache (which degrades to memory-only),
+        losing a freshly fitted profile must be loud. chmod tricks don't
+        work under root CI, so fail the atomic rename itself."""
+        def boom(src, dst):
+            raise OSError("simulated unwritable path")
+
+        from repro.autotune import cache as cache_mod
+        monkeypatch.setattr(cache_mod.os, "replace", boom)
+        with pytest.raises(OSError, match="simulated"):
+            save_profile(self._model(), path=tmp_path / "p.json")
+
+    def test_save_strict_on_unreadable_existing_file(self, tmp_path,
+                                                     monkeypatch):
+        """A momentarily unreadable profile file must NOT be treated as
+        empty under strict mode — that would atomically replace it with
+        only the new profile, silently discarding every saved one."""
+        import builtins
+        p = tmp_path / "profiles.json"
+        save_profile(self._model("keep-me"), path=p)
+        real_open = builtins.open
+
+        def flaky_open(file, *a, **kw):
+            if str(file) == str(p):
+                raise PermissionError("simulated EACCES")
+            return real_open(file, *a, **kw)
+
+        monkeypatch.setattr(builtins, "open", flaky_open)
+        with pytest.raises(OSError, match="EACCES"):
+            save_profile(self._model("new"), path=p)
+        monkeypatch.undo()
+        assert set(list_profiles(p)) == {"keep-me"}
+
+    def test_from_dict_rejects_unknown_fields(self):
+        with pytest.raises(ValueError):
+            MachineModel.from_dict({"name": "x", "warp_size": 32})
+
+    def test_env_var_overrides_default_path(self, monkeypatch, tmp_path):
+        from repro.autotune import default_profiles_path
+        monkeypatch.setenv("REPRO_MACHINE_PROFILES",
+                           str(tmp_path / "env.json"))
+        assert default_profiles_path() == str(tmp_path / "env.json")
+
+    def test_profile_change_invalidates_decisions(self, tmp_path):
+        """The ISSUE's acceptance bar: a fitted profile round-trips
+        through save/load and its signature keys the decision cache, so
+        decisions made under other constants are never served."""
+        p = tmp_path / "profiles.json"
+        save_profile(self._model(), path=p)
+        loaded = load_profile("prof-test", path=p)
+        cache = DecisionCache(path=None)
+        a = _small(8)
+        clear_memo()
+        select(a, cache=cache)                     # default V5E
+        select(a, machine=loaded, cache=cache)     # fitted profile
+        assert len(cache) == 2
+        keys = list(cache._load())
+        assert any(loaded.signature() in k for k in keys)
+        assert any(V5E.signature() in k for k in keys)

@@ -44,6 +44,89 @@ class TestSparseLinear:
         assert sl.apply(x).shape == (2, 3, 640)
 
 
+class TestSparseLinearDtype:
+    """The serving path must honor the packed matrix dtype end to end —
+    the batched decode-gather path used to cast to float32 regardless
+    (sparse_linear.py batched `apply`), silently discarding float64
+    precision the single-vector SpMV path preserved."""
+
+    @pytest.fixture(scope="class")
+    def sl64(self):
+        rng = np.random.default_rng(11)
+        w = (rng.standard_normal((96, 200)) / 10).astype(np.float64)
+        return SparseLinear.from_dense(w, sparsity=0.7, value_bits=6,
+                                       lane_width=32)
+
+    def test_float64_preserved_through_encode(self, sl64):
+        assert sl64.mat.dtype == np.float64
+
+    def test_float64_batched_regression(self, sl64):
+        rng = np.random.default_rng(12)
+        x = rng.standard_normal((4, 96))          # float64
+        got = np.asarray(sl64.apply(x))
+        want = np.asarray(sl64.apply_dense_reference(x))
+        assert got.dtype == np.float64
+        # float64 tolerance: a float32 contraction fails this by ~1e-7
+        np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+    def test_float64_single_vector(self, sl64):
+        rng = np.random.default_rng(13)
+        x = rng.standard_normal((1, 96))
+        got = np.asarray(sl64.apply(x))
+        want = np.asarray(sl64.apply_dense_reference(x))
+        np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+class TestSparseLinearRgcsrAuto:
+    def test_batched_apply_under_rgcsr_dtans_decision(self):
+        """The decode-gather SpMM path under an RGCSR-dtANS autotune
+        decision (auto=True): skewed row lengths make the group-aligned
+        family win, and the batched contraction must still match the
+        dense reference."""
+        from repro.autotune import DecisionCache
+        from repro.core.rgcsr_dtans import RGCSRdtANS
+        rng = np.random.default_rng(14)
+        m_out, d_in = 256, 96
+        w = np.zeros((d_in, m_out), dtype=np.float32)
+        w[:, :8] = rng.standard_normal((d_in, 8)) * 5      # dense neurons
+        tail = rng.random((d_in, m_out - 8)) < 0.06        # sparse tail
+        w[:, 8:][tail] = rng.standard_normal(int(tail.sum())) * 3
+        sl = SparseLinear.from_dense(
+            w, sparsity=0.5, auto=True,
+            autotune_cache=DecisionCache(path=None))
+        assert sl.decision.fmt == "rgcsr_dtans", sl.decision.config_name
+        assert isinstance(sl.mat, RGCSRdtANS)
+        x = rng.standard_normal((3, d_in)).astype(np.float32)
+        got = np.asarray(sl.apply(x))
+        want = np.asarray(sl.apply_dense_reference(x))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+class TestCompressLmHead:
+    def test_tied_head_compresses_and_validates(self):
+        cfg = get_smoke("smollm-135m").with_(vocab=64)
+        params = api.init_params(cfg, jax.random.PRNGKey(1))
+        sl = Engine.compress_lm_head(cfg, params, sparsity=0.5,
+                                     value_bits=5, lane_width=32)
+        assert sl.d_out == cfg.vocab
+        assert sl.mat.dtype == np.float32     # source dtype, not forced
+
+    def test_float64_head_dtype_preserved(self):
+        cfg = get_smoke("smollm-135m").with_(vocab=48)
+        rng = np.random.default_rng(15)
+        params = {"embed": {
+            "head": rng.standard_normal((cfg.d_model, cfg.vocab))}}
+        sl = Engine.compress_lm_head(cfg, params, sparsity=0.5,
+                                     value_bits=5, lane_width=32)
+        assert sl.mat.dtype == np.float64
+
+    def test_shape_mismatch_raises(self):
+        cfg = get_smoke("smollm-135m").with_(vocab=64)
+        params = {"embed": {"head": np.zeros((3, 5), dtype=np.float32)}}
+        with pytest.raises(ValueError, match="does not match config"):
+            Engine.compress_lm_head(cfg, params)
+
+
 class TestEngine:
     def test_batched_serving_drains(self):
         cfg = get_smoke("smollm-135m").with_(vocab=64)

@@ -168,6 +168,36 @@ def dense_case(request):
     return request.param, CORPUS[request.param]()
 
 
+#: The three public ops entry points share one ``(mat, x, y=None)``
+#: signature — the timing harness (`repro.autotune.measure`) drives them
+#: interchangeably. name -> packed-artifact builder + runner.
+OPS_ACCUMULATE = {
+    "ops.spmv": lambda a, x, y: ops.spmv(
+        encode_matrix(a, lane_width=16), x, y),
+    "ops.sell_spmv": lambda a, x, y: ops.sell_spmv(
+        pack_sell(a, lane_width=16), x, y),
+    "ops.rgcsr_spmv": lambda a, x, y: ops.rgcsr_spmv(
+        pack_rgcsr(RGCSR.from_csr(a, 8)), x, y),
+}
+
+
+@pytest.mark.parametrize("entry", list(OPS_ACCUMULATE),
+                         ids=list(OPS_ACCUMULATE))
+@pytest.mark.parametrize("dtype", [np.float32, np.float64],
+                         ids=["f32", "f64"])
+def test_ops_accumulate_y(entry, dtype):
+    """y = A x + y through every ops entry point (shared signature)."""
+    d = CORPUS["regular"]().astype(dtype)
+    a = CSR.from_dense(d)
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal(a.shape[1]).astype(dtype)
+    y0 = rng.standard_normal(a.shape[0]).astype(dtype)
+    got = np.asarray(OPS_ACCUMULATE[entry](a, x, y0))
+    tol = TOL[dtype]
+    np.testing.assert_allclose(got, d @ x + y0, rtol=tol, atol=tol,
+                               err_msg=f"{entry} accumulate diverges")
+
+
 @pytest.mark.parametrize("path", list(SPMV_PATHS), ids=list(SPMV_PATHS))
 @pytest.mark.parametrize("dtype", [np.float32, np.float64],
                          ids=["f32", "f64"])
