@@ -43,13 +43,14 @@ calibration shrinks it.
 
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
 
 from benchmarks.suite import cached_suite, model_time, spmv_bytes
-from repro.autotune import (DecisionCache, clear_memo, measure_named,
-                            select)
+from repro.autotune import (DecisionCache, clear_memo, format_names,
+                            measure_named, select)
 from repro.autotune.oracle import oracle_best
 from repro.sparse.formats import CSR, all_format_nbytes
 
@@ -57,7 +58,43 @@ from repro.sparse.formats import CSR, all_format_nbytes
 _ENC: dict = {}
 
 
-def run(small: bool = False, measure: bool = True):
+def load_mtx_dir(mtx_dir: str, max_nnz: int | None = None) -> dict:
+    """Real MatrixMarket files (SuiteSparse downloads) -> name -> CSR,
+    skipping files whose nnz exceeds ``max_nnz`` (encode-everything
+    oracles get expensive; the guard keeps a stray full-size
+    SuiteSparse drop from hanging the benchmark)."""
+    from repro.sparse.io import load_mtx
+    out: dict = {}
+    for fn in sorted(os.listdir(mtx_dir)):
+        if not (fn.endswith(".mtx") or fn.endswith(".mtx.gz")):
+            continue
+        stem = fn[:-len(".mtx.gz")] if fn.endswith(".mtx.gz") \
+            else fn[:-len(".mtx")]
+        if f"mtx/{stem}" in out:
+            # foo.mtx already loaded and foo.mtx.gz sits beside it (a
+            # kept-compressed download next to its extraction).
+            print(f"# mtx/{stem}: skipped ({fn} duplicates an "
+                  f"already-loaded stem)", flush=True)
+            continue
+        try:
+            a = load_mtx(os.path.join(mtx_dir, fn))
+        except (ValueError, OSError, EOFError) as e:
+            # ValueError: unsupported/malformed MatrixMarket content;
+            # OSError covers gzip.BadGzipFile and unreadable files,
+            # EOFError truncated .gz — all skip-and-continue, a stray
+            # corrupt download must not abort the whole benchmark.
+            print(f"# mtx/{stem}: skipped ({e})", flush=True)
+            continue
+        if max_nnz is not None and a.nnz > max_nnz:
+            print(f"# mtx/{stem}: skipped (nnz {a.nnz} > "
+                  f"--max-nnz {max_nnz})", flush=True)
+            continue
+        out[f"mtx/{stem}"] = a
+    return out
+
+
+def run(small: bool = False, measure: bool = True,
+        mtx_dir: str | None = None, max_nnz: int | None = 2_000_000):
     rows = []
     wins = 0
     agree = 0
@@ -70,7 +107,16 @@ def run(small: bool = False, measure: bool = True):
     cache_meas = DecisionCache(path=None)
     clear_memo()
 
-    for name, a64 in cached_suite(small=small).items():
+    suite = dict(cached_suite(small=small))
+    if mtx_dir:
+        suite.update(load_mtx_dir(mtx_dir, max_nnz=max_nnz))
+    # A silently broken FormatSpec registration would shrink this count
+    # and the candidate sweep with it; CI asserts >= 9 (every built-in)
+    # on the smoke JSON artifact.
+    rows.append(("fig9/registry_formats", 0.0,
+                 f"count={len(format_names())}"))
+
+    for name, a64 in suite.items():
         a = CSR(a64.indptr, a64.indices,
                 a64.values.astype(np.float32), a64.shape)
 

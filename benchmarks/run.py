@@ -34,6 +34,15 @@ def main() -> None:
     ap.add_argument("--profile-json", default=None, metavar="PATH",
                     help="persist the calib section's fitted machine "
                          "profile to this JSON file (CI artifact)")
+    ap.add_argument("--mtx-dir", default=None, metavar="PATH",
+                    help="directory of MatrixMarket files (.mtx / "
+                         ".mtx.gz, e.g. SuiteSparse downloads) fed "
+                         "through repro.sparse.io into the fig9 "
+                         "selection suite")
+    ap.add_argument("--max-nnz", default=2_000_000, type=int,
+                    help="skip --mtx-dir files with more stored "
+                         "nonzeros than this (default 2e6; the "
+                         "exhaustive oracle encodes every candidate)")
     args, _ = ap.parse_known_args()
 
     from benchmarks import (bench_calibration, bench_compression,
@@ -48,7 +57,8 @@ def main() -> None:
         "fig8": lambda: bench_spmv.run(small=args.small, warm=False,
                                        measure=False),
         "fig9": lambda: bench_format_selection.run(
-            small=args.small, measure=not args.no_measure),
+            small=args.small, measure=not args.no_measure,
+            mtx_dir=args.mtx_dir, max_nnz=args.max_nnz),
         "calib": lambda: bench_calibration.run(
             small=args.small, profile_json=args.profile_json),
     }

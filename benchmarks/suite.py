@@ -18,8 +18,8 @@ from repro.autotune.cost_model import V5E, model_time, spmv_bytes  # noqa: F401 
 from repro.sparse.formats import CSR
 from repro.sparse.prune import codebook_quantize, magnitude_prune
 from repro.sparse.random_graphs import (banded, barabasi_albert,
-                                        erdos_renyi, stencil_2d,
-                                        watts_strogatz)
+                                        block_sparse, erdos_renyi,
+                                        stencil_2d, watts_strogatz)
 
 # Backwards-compatible constant names (now sourced from the V5E model).
 HBM_BW = V5E.hbm_bw
@@ -62,6 +62,10 @@ def suite(small: bool = False) -> dict:
                                  sparsity=0.9, seed=1),
         "random_vals": random_values(int(3000 * f)),
         "tiny_er": erdos_renyi(300, 6, rng),
+        # Block-structured sparsity (FEM / multi-DOF / structured
+        # pruning): the case the blocked formats exist for.
+        "blocked_4x4": block_sparse(int(500 * f), int(500 * f), (4, 4),
+                                    0.03, np.random.default_rng(21)),
     }
     return out
 

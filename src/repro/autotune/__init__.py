@@ -16,16 +16,21 @@ a persistent cache (`cache.DecisionCache`).
 from repro.autotune.cache import (DecisionCache, atomic_merge_json,
                                   default_cache, default_cache_path)
 from repro.autotune.cost_model import (DTANS_LANE_WIDTHS, V5E, Candidate,
-                                       MachineModel, candidate_time,
+                                       MachineModel, bcsr_config_name,
+                                       bcsr_dtans_nbytes_estimate,
+                                       candidate_time,
                                        candidates, coo_nbytes, csr_nbytes,
                                        dtans_config_name,
                                        dtans_nbytes_estimate,
-                                       format_ops_per_elem, model_time,
+                                       memory_time, model_time,
                                        rgcsr_config_name,
                                        rgcsr_dtans_config_name,
                                        rgcsr_dtans_nbytes_estimate,
                                        rgcsr_nbytes, sell_nbytes,
-                                       spmv_bytes, spmv_time)
+                                       spmv_bytes, spmv_time, work_time)
+from repro.sparse.registry import (CostTerms, FormatSpec, format_names,
+                                   get_format, iter_formats,
+                                   parse_config, register, unregister)
 from repro.autotune.fingerprint import (Fingerprint, codeable_bits,
                                         fingerprint, lockstep_elems,
                                         max_group_nnz)
@@ -42,22 +47,27 @@ from repro.autotune.search import (ALL_FORMATS, Decision,
 from repro.sparse.rgcsr import RGCSR_GROUP_SIZES
 
 __all__ = [
-    "ALL_FORMATS", "CalibrationResult", "Candidate", "Decision",
-    "DecisionCache",
-    "DTANS_LANE_WIDTHS", "Fingerprint", "MachineModel",
+    "ALL_FORMATS", "CalibrationResult", "Candidate", "CostTerms",
+    "Decision", "DecisionCache",
+    "DTANS_LANE_WIDTHS", "Fingerprint", "FormatSpec", "MachineModel",
     "RGCSR_GROUP_SIZES", "V5E",
-    "atomic_merge_json", "calibrate",
+    "atomic_merge_json", "bcsr_config_name",
+    "bcsr_dtans_nbytes_estimate", "calibrate",
     "candidate_time", "candidates", "choose_dtans_config", "clear_memo",
     "codeable_bits",
     "coo_nbytes", "csr_nbytes", "default_cache", "default_cache_path",
     "default_profiles_path",
     "dtans_config_name",
-    "dtans_nbytes_estimate", "fingerprint", "format_ops_per_elem",
+    "dtans_nbytes_estimate", "fingerprint", "format_names",
+    "get_format", "iter_formats",
     "list_profiles", "load_profile", "lockstep_elems", "max_group_nnz",
-    "measure_candidate", "measure_config", "measure_named", "model_time",
-    "oracle_best", "parse_config_name",
-    "oracle_times", "rgcsr_config_name", "rgcsr_dtans_config_name",
+    "measure_candidate", "measure_config", "measure_named",
+    "memory_time", "model_time",
+    "oracle_best", "parse_config", "parse_config_name",
+    "oracle_times", "register", "rgcsr_config_name",
+    "rgcsr_dtans_config_name",
     "rgcsr_dtans_nbytes_estimate", "rgcsr_nbytes", "save_profile",
     "select",
     "sell_nbytes", "spmv_bytes", "spmv_time", "time_kernel",
+    "unregister", "work_time",
 ]

@@ -10,34 +10,37 @@ with ``hit_bytes = min(bytes, cache_bytes)`` for a warm cache (the
 paper's 96 MB GPU L2 has the v5e CMEM/VMEM-resident working set as its
 analogue) and 0 for a cold one.
 
-The compute term distinguishes *how* each format's kernel walks the
-matrix (``work = work_elems * ops_per_elem``):
+The compute term is priced from each format's
+`repro.sparse.registry.FormatSpec.cost_terms` work split:
 
-* **lock-step formats** (SELL, RGCSR, the dtANS family) process slices
-  of ``width`` rows to the longest row in the slice, so their
-  ``work_elems`` is `fingerprint.lockstep_elems` — stored *plus padded*
-  element slots. SELL additionally pays that padding in bytes; RGCSR and
-  RGCSR-dtANS store compactly and pay it only here, which is exactly the
-  padding-waste vs slice-alignment trade the selector arbitrates.
-* **row-sequential formats** (CSR, COO) touch only real nonzeros but
-  cannot fill the vector unit with irregular rows; they are charged
-  ``row_seq_penalty`` ops per element (sublane utilization, the reason
-  GPU SpMV abandons plain CSR).
-* **entropy-coded formats** add ``decode_ops_per_nnz`` vector ops per
-  processed element (segment unpack + table gathers + limb update,
-  counted from ``kernels/common.py``) — the paper's observation that
-  warm caches shift the bottleneck from bytes to decode throughput
-  (Section V-B vs V-C). This is the predictor behind the paper-Fig. 9
-  format-selection question that `repro.autotune.select` answers per
-  matrix.
+* **lock-step work** (SELL, RGCSR, BCSR, the dtANS family) — element
+  slots processed ``spmv_ops_per_elem`` at a time, slices running to
+  their longest row (`Fingerprint.lockstep`; BCSR counts its filled
+  block cells). SELL additionally pays the padding in bytes; RGCSR
+  stores compactly and pays it only here — exactly the padding-waste vs
+  slice-alignment trade the selector arbitrates.
+* **row-sequential work** (CSR, COO) — real nonzeros that cannot fill
+  the vector unit with irregular rows, charged ``row_seq_penalty`` ops
+  per element (sublane utilization, the reason GPU SpMV abandons plain
+  CSR).
+* **decode work** (the entropy-coded formats) — ``decode_ops_per_nnz``
+  vector ops per processed element (segment unpack + table gathers +
+  limb update, counted from ``kernels/common.py``) — the paper's
+  observation that warm caches shift the bottleneck from bytes to
+  decode throughput (Section V-B vs V-C). This is the predictor behind
+  the paper-Fig. 9 format-selection question `repro.autotune.select`
+  answers per matrix.
 
-Byte counts for CSR/COO/SELL/RGCSR are *exact* given a fingerprint;
-dtANS-family bytes are estimated from the fingerprint's escape-aware
-entropy features (see `fingerprint.codeable_bits`) and can be refined by
-actually encoding (``search.select(budget=...)``).
+Byte counts come from the registry too: `FormatSpec.nbytes_exact` where
+the fingerprint carries the format's features, `nbytes_estimate`
+(escape-aware entropy features, see `fingerprint.codeable_bits`) for
+the entropy-coded families, refinable by actually encoding
+(``search.select(budget=...)``). The estimate formulas live here; the
+specs call back into them lazily.
 
 (`model_time` keeps the original two-term + decode-flag form for the
-paper-figure benchmarks, Figs. 7/8; the selector path uses `spmv_time`.)
+paper-figure benchmarks, Figs. 7/8; the selector path uses
+`candidate_time` = `memory_time` + `work_time`.)
 """
 
 from __future__ import annotations
@@ -47,6 +50,9 @@ import math
 
 from repro.autotune.fingerprint import Fingerprint
 from repro.core.params import PAPER, DtansParams
+from repro.sparse.registry import (CostTerms, DTANS_LANE_WIDTHS,
+                                   DTANS_SHARED_TABLE, KnobbedConfigMixin,
+                                   format_names, get_format)
 from repro.sparse.rgcsr import RGCSR_GROUP_SIZES, local_indptr_bytes
 
 
@@ -88,36 +94,32 @@ class MachineModel:
 
 
 def dtans_config_name(lane_width: int, shared_table: bool) -> str:
-    """Canonical display/lookup name of one CSR-dtANS configuration.
-
-    Single source of truth — `Candidate.config_name`,
-    `search.Decision.config_name`, the benchmarks and the tests all key
-    result tables by this string.
-    """
-    tables = "shared" if shared_table else "split"
-    return f"dtans[w={lane_width},{tables}]"
+    """Canonical name of one CSR-dtANS configuration (registry-backed;
+    `FormatSpec.encode_knobs` is the single source of truth)."""
+    return get_format("dtans").encode_knobs(
+        {"lane_width": lane_width, "shared_table": shared_table})
 
 
 def rgcsr_config_name(group_size: int) -> str:
     """Canonical name of one plain-RGCSR configuration."""
-    return f"rgcsr[G={group_size}]"
+    return get_format("rgcsr").encode_knobs({"group_size": group_size})
 
 
 def rgcsr_dtans_config_name(group_size: int,
                             shared_table: bool = True) -> str:
     """Canonical name of one RGCSR-dtANS configuration."""
-    tables = "shared" if shared_table else "split"
-    return f"rgcsr_dtans[G={group_size},{tables}]"
+    return get_format("rgcsr_dtans").encode_knobs(
+        {"group_size": group_size, "shared_table": shared_table})
+
+
+def bcsr_config_name(block_shape: tuple) -> str:
+    """Canonical name of one plain-BCSR configuration."""
+    return get_format("bcsr").encode_knobs({"block_shape": block_shape})
 
 
 #: Default chip model (TPU v5e), numerically identical to the constants
 #: the benchmarks have always used.
 V5E = MachineModel()
-
-#: dtANS configurations enumerated by the tuner: GPU-warp and TPU-lane
-#: interleave widths x shared vs per-domain coding tables.
-DTANS_LANE_WIDTHS = (32, 128)
-DTANS_SHARED_TABLE = (True, False)
 
 
 def spmv_bytes(fmt_bytes: int, n: int, m: int, vbytes: int) -> int:
@@ -131,129 +133,112 @@ def model_time(bytes_moved: int, nnz: int, *, warm: bool, decode: bool,
 
     Kept verbatim for the paper-figure benchmarks (Figs. 7/8 compare a
     fixed CSR-dtANS against byte-count baselines under the paper's own
-    model). The selector uses `spmv_time`, which also charges the
+    model). The selector uses `candidate_time`, which also charges the
     per-format kernel work."""
-    hit = min(bytes_moved, machine.cache_bytes) if warm else 0.0
-    miss = bytes_moved - hit
-    t = miss / machine.hbm_bw + hit / machine.cache_bw
+    t = memory_time(bytes_moved, warm=warm, machine=machine)
     if decode:
         t += nnz * machine.decode_ops_per_nnz / machine.vpu_rate
     return t
 
 
-#: Lock-step formats (work_elems from `Fingerprint.lockstep`); the rest
-#: of the known formats are row-sequential.
-LOCKSTEP_FORMATS = ("sell", "rgcsr", "dtans", "rgcsr_dtans")
-DECODE_FORMATS = ("dtans", "rgcsr_dtans")
-KNOWN_FORMATS = ("csr", "coo", "sell", "rgcsr", "dtans", "rgcsr_dtans")
+def work_time(terms: CostTerms, machine: MachineModel = V5E) -> float:
+    """Seconds of kernel compute for one `FormatSpec.cost_terms` split."""
+    ops = ((terms.lockstep + terms.rowseq * machine.row_seq_penalty)
+           * machine.spmv_ops_per_elem
+           + terms.decode * machine.decode_ops_per_nnz)
+    return ops / machine.vpu_rate
 
 
-def format_ops_per_elem(fmt: str, machine: MachineModel = V5E) -> float:
-    """Vector ops one kernel spends per processed element slot."""
-    if fmt in ("csr", "coo"):
-        return machine.spmv_ops_per_elem * machine.row_seq_penalty
-    if fmt in ("sell", "rgcsr"):
-        return machine.spmv_ops_per_elem
-    if fmt in DECODE_FORMATS:
-        return machine.spmv_ops_per_elem + machine.decode_ops_per_nnz
-    raise ValueError(f"unknown format {fmt!r}")
+def memory_time(bytes_moved: float, *, warm: bool,
+                machine: MachineModel = V5E) -> float:
+    """Two-level memory seconds for one pass over ``bytes_moved`` —
+    the single home of the warm hit/miss split (`spmv_time`,
+    `candidate_time` and `model_time`'s callers all price memory
+    through this formula)."""
+    hit = min(bytes_moved, machine.cache_bytes) if warm else 0.0
+    return (bytes_moved - hit) / machine.hbm_bw + hit / machine.cache_bw
 
 
 def spmv_time(nbytes: int, work_elems: float, ops_per_elem: float, *,
               rows: int, cols: int, vbytes: int, warm: bool,
               machine: MachineModel = V5E) -> float:
     """Modeled seconds of one SpMVM pass (selector model: memory time
-    plus per-format kernel work)."""
-    bytes_moved = spmv_bytes(nbytes, cols, rows, vbytes)
-    hit = min(bytes_moved, machine.cache_bytes) if warm else 0.0
-    miss = bytes_moved - hit
-    return (miss / machine.hbm_bw + hit / machine.cache_bw
+    plus per-format kernel work, here as a flat work x ops/elem
+    product; `candidate_time` is the `CostTerms`-split form)."""
+    return (memory_time(spmv_bytes(nbytes, cols, rows, vbytes),
+                        warm=warm, machine=machine)
             + work_elems * ops_per_elem / machine.vpu_rate)
 
 
 def candidate_time(fp: Fingerprint, fmt: str, nbytes: int, *, warm: bool,
-                   machine: MachineModel = V5E,
-                   lane_width: int | None = None,
-                   group_size: int | None = None) -> float:
-    """`spmv_time` of one (format, config) from fingerprint features.
+                   machine: MachineModel = V5E, **knobs) -> float:
+    """Modeled seconds of one (format, config) from fingerprint
+    features: `memory_time` plus the `work_time` of the format's
+    `CostTerms`.
 
-    The single formula shared by `candidates`, `search._refine` and the
-    exhaustive oracle (`repro.autotune.oracle`) — selector and oracle
-    cannot drift apart.
-    """
-    if fmt in ("csr", "coo"):
-        work = fp.nnz
-    elif fmt == "sell":
-        work = fp.sell_padded_nnz
-    elif fmt == "rgcsr":
-        work = fp.lockstep(group_size)
-    elif fmt == "dtans":
-        work = fp.lockstep(lane_width)
-    elif fmt == "rgcsr_dtans":
-        work = fp.lockstep(group_size)
-    else:
-        raise ValueError(f"unknown format {fmt!r}")
-    return spmv_time(nbytes, work, format_ops_per_elem(fmt, machine),
-                     rows=fp.rows, cols=fp.cols, vbytes=fp.value_bytes,
-                     warm=warm, machine=machine)
+    The single formula shared by `candidates`, `search._refine`, the
+    exhaustive oracle (`repro.autotune.oracle`) and calibration —
+    selector and oracle cannot drift apart. Knobs the format does not
+    declare are ignored, so callers may pass a candidate's full knob
+    set."""
+    spec = get_format(fmt)
+    terms = spec.cost_terms(fp, **spec.filter_knobs(knobs))
+    return (memory_time(spmv_bytes(nbytes, fp.cols, fp.rows,
+                                   fp.value_bytes),
+                        warm=warm, machine=machine)
+            + work_time(terms, machine))
 
 
 @dataclasses.dataclass(frozen=True)
-class Candidate:
-    """One (format, config) point with its size and modeled runtime."""
+class Candidate(KnobbedConfigMixin):
+    """One (format, config) point with its size and modeled runtime.
 
-    fmt: str                      # one of KNOWN_FORMATS
+    ``knobs`` is the canonical ``((name, value), ...)`` tuple of the
+    configuration — the registry's generic replacement for per-format
+    fields; `lane_width` / `shared_table` / `group_size` /
+    `block_shape` remain available via `KnobbedConfigMixin`.
+    """
+
+    fmt: str                      # a registered format family
     nbytes: int                   # format bytes (estimated or exact)
     modeled_time: float           # seconds per SpMVM pass
     exact_size: bool              # True when nbytes is not an estimate
-    lane_width: int | None = None      # dtans family only
-    shared_table: bool | None = None   # dtans family only
-    group_size: int | None = None      # rgcsr family only
+    knobs: tuple = ()             # ((knob, value), ...), domain order
     # Median wall-clock seconds from `repro.autotune.measure`; filled
     # by the measured-refinement pass, None for modeled-only search.
     measured_time: float | None = None
 
-    @property
-    def config_name(self) -> str:
-        if self.fmt == "dtans":
-            return dtans_config_name(self.lane_width, self.shared_table)
-        if self.fmt == "rgcsr":
-            return rgcsr_config_name(self.group_size)
-        if self.fmt == "rgcsr_dtans":
-            return rgcsr_dtans_config_name(self.group_size,
-                                           self.shared_table)
-        return self.fmt
+
+def make_candidate(fp: Fingerprint, fmt: str, knobs: dict, nbytes: int,
+                   exact: bool, *, warm: bool,
+                   machine: MachineModel = V5E) -> Candidate:
+    """Price one (format, knobs, nbytes) point into a `Candidate`."""
+    spec = get_format(fmt)
+    kn = spec.normalize_knobs(knobs)
+    return Candidate(
+        fmt=fmt, nbytes=int(nbytes),
+        modeled_time=candidate_time(fp, fmt, nbytes, warm=warm,
+                                    machine=machine, **kn),
+        exact_size=bool(exact),
+        knobs=tuple((k, kn[k]) for k in spec.knob_domains))
 
 
 def csr_nbytes(fp: Fingerprint) -> int:
-    return fp.nnz * (4 + fp.value_bytes) + (fp.rows + 1) * 4
+    return get_format("csr").nbytes_exact(fp)
 
 
 def coo_nbytes(fp: Fingerprint) -> int:
-    return fp.nnz * (8 + fp.value_bytes)
+    return get_format("coo").nbytes_exact(fp)
 
 
-def sell_nbytes(fp: Fingerprint) -> int:
-    from repro.autotune.fingerprint import SELL_SLICE_HEIGHT
-    nslices = -(-fp.rows // SELL_SLICE_HEIGHT)
-    return (fp.sell_padded_nnz * (4 + fp.value_bytes)
-            + (nslices + 1) * 4)
+def sell_nbytes(fp: Fingerprint, slice_height: int = 32) -> int:
+    return get_format("sell").nbytes_exact(fp, slice_height=slice_height)
 
 
 def rgcsr_nbytes(fp: Fingerprint, group_size: int) -> int:
     """`repro.sparse.rgcsr.RGCSR.nbytes` from the fingerprint's row-nnz
-    histogram features (mirrors `rgcsr_nbytes_exact`).
-
-    Exact for group sizes in RGCSR_GROUP_SIZES; for other sizes
-    `Fingerprint.group_max_nnz` falls back to ``nnz`` (conservative:
-    may charge 4-byte local indptr where the real format uses 2), so
-    `candidates` marks those estimated and ``budget`` refinement
-    constructs the truth."""
-    G = int(group_size)
-    ngroups = -(-fp.rows // G) if fp.rows else 0
-    lb = local_indptr_bytes(fp.group_max_nnz(G))
-    return (fp.nnz * (4 + fp.value_bytes) + ngroups * (G + 1) * lb
-            + (ngroups + 1) * 4)
+    RLE (mirrors `rgcsr_nbytes_exact`) — exact for *any* group size."""
+    return get_format("rgcsr").nbytes_exact(fp, group_size=group_size)
 
 
 def dtans_nbytes_estimate(fp: Fingerprint, *, lane_width: int = 128,
@@ -320,59 +305,101 @@ def rgcsr_dtans_nbytes_estimate(fp: Fingerprint, *, group_size: int = 32,
     return base - fp.rows * 4 + fp.rows * row_bytes
 
 
+def bcsr_dtans_nbytes_estimate(fp: Fingerprint, *,
+                               block_shape: tuple = (2, 2),
+                               shared_table: bool = True,
+                               params: DtansParams = PAPER) -> int:
+    """Estimated `BCSRdtANS.nbytes` from fingerprint features alone.
+
+    The encoded stream covers the *block-filled* matrix: ``F`` stored
+    cells (`Fingerprint.block_nonempty` x r x c). Unlike the plain
+    dtANS estimate's uniform bits/symbol, segments here come in two
+    classes — ones carrying at least one original value (priced at the
+    value domain's escape-aware bits; these rarely earn conditional-
+    load extractions) and fill-only segments (runs of delta 1 and value
+    0, near the cheapest-in-table floor of ``k_bits - m_bits``, which
+    extract eagerly) — mixed by the probability a segment contains a
+    real value. Exact-fill matrices (F == nnz) have no fill-only
+    segments and reduce to the real-segment model. Still an estimate
+    (within ~10-15% on the stress corpus): ``select(budget=k)``
+    refinement and the oracle construct the truth. Metadata follows
+    `BCSRdtANS.nbytes`: tables, per-block-row 16-bit block counts,
+    per-block-row offsets.
+    """
+    r, c = block_shape
+    vb = fp.value_bytes
+    K = params.K
+    T = 1 if shared_table else 2
+    from repro.sparse.registry import block_count
+    blocks, _ = block_count(fp, block_shape)
+    F = blocks * r * c
+    nbr = -(-fp.rows // r) if fp.rows else 0
+    if F == 0:
+        return T * K * (vb + 8) + nbr * 2 + (nbr + 1) * (8 + 4 * T)
+
+    filled_rows = min(fp.rows, blocks * r)   # rows with >= 1 stored cell
+    ell = params.l
+    # Segment structure of the filled matrix: 2F symbols across
+    # ~filled_rows rows, each row padded to a whole segment.
+    n_segments = max(int(math.ceil(2 * F / ell)), filled_rows)
+
+    fill_bps = params.k_bits - params.m_bits + 0.5
+    # Real-value bits/symbol: the value domain's escape-aware estimate
+    # (the fill symbols dilute the merged table, so the merged average
+    # is a floor, not a price).
+    vbits = max(fp.value_stream_bits, fp.merged_stream_bits)
+    pairs_per_seg = ell / 2
+    bits_real_seg = pairs_per_seg * (vbits + fill_bps)
+    bits_fill_seg = ell * fill_bps
+    # P(segment holds no original value) under a uniform fill mix.
+    p_fill_only = (1.0 - fp.nnz / F) ** pairs_per_seg
+
+    def extracts(seg_bits: float) -> int:
+        return min(max(math.floor((params.o * 32 - seg_bits) / 32.0),
+                       0), params.f)
+
+    n_nonlast = max(n_segments - filled_rows, 0)
+    extract_words = n_nonlast * (
+        p_fill_only * extracts(bits_fill_seg)
+        + (1.0 - p_fill_only) * extracts(bits_real_seg))
+    stream_words = params.o * n_segments - int(extract_words)
+    esc_bytes = int(fp.delta_escape_frac * fp.nnz) * 4
+    esc_bytes += int(fp.value_escape_frac * fp.nnz) * vb
+
+    b = T * K * (vb + 8)                 # coding tables
+    b += 4 * stream_words
+    b += esc_bytes
+    b += nbr * 2                         # per-block-row block counts
+    b += (nbr + 1) * 8                   # stream offsets
+    b += (nbr + 1) * 4 * T               # escape offsets
+    return int(b)
+
+
 def candidates(fp: Fingerprint, *, machine: MachineModel = V5E,
                warm: bool = True, params: DtansParams = PAPER,
-               formats: tuple = KNOWN_FORMATS,
-               lane_widths: tuple = DTANS_LANE_WIDTHS,
-               group_sizes: tuple = RGCSR_GROUP_SIZES) -> list[Candidate]:
-    """Enumerate candidate formats, cheapest modeled time first."""
+               formats: tuple = None,
+               lane_widths: tuple = None,
+               group_sizes: tuple = None,
+               block_shapes: tuple = None) -> list[Candidate]:
+    """Enumerate candidate formats, cheapest modeled time first.
 
-    def t(fmt: str, nbytes: int, lane_width=None, group_size=None) -> float:
-        return candidate_time(fp, fmt, nbytes, warm=warm, machine=machine,
-                              lane_width=lane_width, group_size=group_size)
-
+    Iterates the `repro.sparse.registry` — a newly registered
+    selectable format joins the sweep with no edit here. ``formats``
+    defaults to every selectable registered family; the remaining
+    keywords override individual knob domains.
+    """
+    if formats is None:
+        # Dynamic, not the module constant: formats registered after
+        # import (e.g. in tests) must join the sweep.
+        formats = format_names(selectable=True)
+    overrides = {"lane_width": lane_widths, "group_size": group_sizes,
+                 "block_shape": block_shapes}
     out: list[Candidate] = []
-    exact = {"csr": csr_nbytes, "coo": coo_nbytes, "sell": sell_nbytes}
     for fmt in formats:
-        if fmt in exact:
-            b = exact[fmt](fp)
-            out.append(Candidate(fmt=fmt, nbytes=b, modeled_time=t(fmt, b),
-                                 exact_size=True))
-        elif fmt == "rgcsr":
-            for g in group_sizes:
-                b = rgcsr_nbytes(fp, g)
-                out.append(Candidate(
-                    fmt="rgcsr", nbytes=b,
-                    modeled_time=t("rgcsr", b, group_size=g),
-                    # Sizes are exact only where the fingerprint carries
-                    # the group-nnz feature; other sweeps are estimates
-                    # until budget refinement constructs them.
-                    exact_size=g in RGCSR_GROUP_SIZES, group_size=g))
-        elif fmt == "dtans":
-            for w in lane_widths:
-                for shared in DTANS_SHARED_TABLE:
-                    b = dtans_nbytes_estimate(fp, lane_width=w,
-                                              shared_table=shared,
-                                              params=params)
-                    out.append(Candidate(
-                        fmt="dtans", nbytes=b,
-                        modeled_time=t("dtans", b, lane_width=w),
-                        exact_size=False, lane_width=w,
-                        shared_table=shared))
-        elif fmt == "rgcsr_dtans":
-            # Shared table only: the group sweep already multiplies the
-            # candidate set, and split tables never paid off at narrow
-            # interleave widths (table bytes double, stream bits do not).
-            for g in group_sizes:
-                b = rgcsr_dtans_nbytes_estimate(fp, group_size=g,
-                                                shared_table=True,
-                                                params=params)
-                out.append(Candidate(
-                    fmt="rgcsr_dtans", nbytes=b,
-                    modeled_time=t("rgcsr_dtans", b, group_size=g),
-                    exact_size=False, lane_width=g, shared_table=True,
-                    group_size=g))
-        else:
-            raise ValueError(f"unknown format {fmt!r}")
-    out.sort(key=lambda c: c.modeled_time)
+        spec = get_format(fmt)
+        for knobs, nbytes, exact in spec.candidates(fp, overrides,
+                                                    params=params):
+            out.append(make_candidate(fp, fmt, knobs, nbytes, exact,
+                                      warm=warm, machine=machine))
+    out.sort(key=lambda cand: cand.modeled_time)
     return out

@@ -35,11 +35,6 @@ SAMPLE_CAP = 1 << 16
 #: `repro.sparse.formats.SELL.from_csr`'s default).
 SELL_SLICE_HEIGHT = 32
 
-#: Lane/group widths for which the fingerprint carries *exact* lock-step
-#: work counts (`Fingerprint.lockstep`): the union of the dtANS
-#: interleave widths (32, 128) and the RGCSR group sizes.
-LOCKSTEP_WIDTHS = (4, 8, 16, 32, 128)
-
 
 def lockstep_elems(row_nnz: np.ndarray, width: int) -> int:
     """Elements processed by a ``width``-row lock-step SpMV kernel.
@@ -92,36 +87,113 @@ class Fingerprint:
     merged_stream_bits: float   # shared delta+value table (paper default)
     delta_escape_frac: float
     value_escape_frac: float
-    # Exact lock-step work per width in LOCKSTEP_WIDTHS, and exact max
-    # group-nnz per group size in RGCSR_GROUP_SIZES (row-nnz histogram
-    # features for the RGCSR candidates; both O(rows) to compute):
-    lockstep_by_width: tuple = ()
-    group_nnz_max: tuple = ()
+    # Run-length-encoded row-nnz sequence — the row-nnz histogram in
+    # its exact, order-preserving form, packed as the raw bytes of an
+    # int64 (2, n_runs) array ``[values; run_lengths]`` (bytes, not a
+    # tuple-of-tuples: irregular matrices degenerate to one run per
+    # row, and a 400k-row matrix must not pay seconds building Python
+    # ints or JSON-serializing them into the cache key — `key` hashes
+    # a digest of this blob instead). Every lock-step / group-size
+    # feature derives from it for *arbitrary* widths (no optimistic
+    # fallback), at O(rows) per width, memoized.
+    row_nnz_rle: bytes = b""
+
+    def _derived(self) -> dict:
+        """Per-instance memo for O(rows) derived features (not a
+        dataclass field: excluded from equality and `key`)."""
+        cache = self.__dict__.get("_derived_cache")
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_derived_cache", cache)
+        return cache
+
+    def row_nnz(self) -> np.ndarray:
+        """The exact row-nnz sequence, expanded from the RLE."""
+        cache = self._derived()
+        if "row_nnz" not in cache:
+            if self.row_nnz_rle:
+                vals, runs = np.frombuffer(self.row_nnz_rle,
+                                           dtype=np.int64).reshape(2, -1)
+                cache["row_nnz"] = np.repeat(vals, runs)
+            else:
+                cache["row_nnz"] = np.zeros(0, dtype=np.int64)
+        return cache["row_nnz"]
 
     def lockstep(self, width: int) -> int:
-        """Exact lock-step work elements for ``width``-row slices; falls
-        back to ``nnz`` (optimistic) for widths outside
-        LOCKSTEP_WIDTHS."""
-        try:
-            return self.lockstep_by_width[LOCKSTEP_WIDTHS.index(width)]
-        except (ValueError, IndexError):
+        """Exact lock-step work elements for ``width``-row slices, any
+        width (each slice of ``width`` consecutive rows runs to its
+        longest row). A hand-built Fingerprint without the RLE degrades
+        to the conservative ``nnz`` instead of a silent 0 (which would
+        make every lock-step format look free)."""
+        if not self.row_nnz_rle and self.nnz:
             return self.nnz
+        cache = self._derived()
+        key = ("lockstep", int(width))
+        if key not in cache:
+            cache[key] = lockstep_elems(self.row_nnz(), int(width))
+        return cache[key]
 
     def group_max_nnz(self, group_size: int) -> int:
-        try:
-            return self.group_nnz_max[
-                RGCSR_GROUP_SIZES.index(group_size)]
-        except (ValueError, IndexError):
+        """Exact largest group-total nnz for any group size (decides
+        RGCSR's 16- vs 32-bit local indptr width); conservative ``nnz``
+        for a hand-built Fingerprint without the RLE."""
+        if not self.row_nnz_rle and self.nnz:
             return self.nnz
+        cache = self._derived()
+        key = ("group_max", int(group_size))
+        if key not in cache:
+            cache[key] = max_group_nnz(self.row_nnz(), int(group_size))
+        return cache[key]
+
+    def block_nonempty(self, block_shape: tuple) -> int | None:
+        """Exact nonempty r x c block count for ANY block shape — the
+        block-fill histogram behind the exact BCSR byte counts.
+
+        Computed lazily from the CSR structure `fingerprint` stashes on
+        the instance (an O(nnz log nnz) np.unique per shape is too
+        expensive to pay eagerly for sweeps that never consider a
+        blocked format) and memoized per shape. None only for
+        hand-built Fingerprints without stashed structure (callers
+        fall back to a conservative one-block-per-nonzero estimate)."""
+        st = self.__dict__.get("_structure")
+        if st is None:
+            return None
+        cache = self._derived()
+        key = ("blocks", tuple(block_shape))
+        if key not in cache:
+            from repro.sparse.bcsr import count_nonempty_blocks
+            indptr, indices, shape = st
+            cache[key] = count_nonempty_blocks(indptr, indices, shape,
+                                               tuple(block_shape))
+        return cache[key]
 
     def key(self) -> str:
-        """Stable content hash — the on-disk decision-cache key."""
+        """Stable content hash — the on-disk decision-cache key.
+
+        The packed row-nnz RLE enters as a sha1 digest, not its (up to
+        O(rows)) contents, so key() stays sub-millisecond on matrices
+        with hundreds of thousands of irregular rows."""
         d = dataclasses.asdict(self)
         for k, v in d.items():
             if isinstance(v, float):
                 d[k] = round(v, 6)
+        d["row_nnz_rle"] = hashlib.sha1(self.row_nnz_rle).hexdigest()
         blob = json.dumps(d, sort_keys=True).encode()
         return hashlib.sha1(blob).hexdigest()[:16]
+
+
+def _pack_rle(row_nnz: np.ndarray) -> bytes:
+    """Run-length-encode a row-nnz sequence into the packed int64
+    ``[values; run_lengths]`` bytes of `Fingerprint.row_nnz_rle`
+    (vectorized — no per-row Python objects)."""
+    row_nnz = np.asarray(row_nnz, dtype=np.int64)
+    if row_nnz.size == 0:
+        return b""
+    change = np.flatnonzero(np.diff(row_nnz)) + 1
+    starts = np.concatenate([[0], change])
+    ends = np.concatenate([change, [row_nnz.size]])
+    return np.ascontiguousarray(
+        np.vstack([row_nnz[starts], ends - starts])).tobytes()
 
 
 def _sample(arr: np.ndarray, cap: int) -> np.ndarray:
@@ -197,7 +269,7 @@ def fingerprint(a, params: DtansParams = PAPER,
     esc_raw_value = max(32, value_bits)
 
     if nnz == 0:
-        return Fingerprint(
+        fp0 = Fingerprint(
             rows=m, cols=n, nnz=0, value_bytes=vb, row_nnz_mean=0.0,
             row_nnz_cv=0.0, row_nnz_max=0, bandwidth=0, sell_padded_nnz=0,
             segment_pad_symbols=0, n_segments=0, nonempty_rows=0,
@@ -206,8 +278,9 @@ def fingerprint(a, params: DtansParams = PAPER,
             delta_stream_bits=0.0,
             value_stream_bits=0.0, merged_stream_bits=0.0,
             delta_escape_frac=0.0, value_escape_frac=0.0,
-            lockstep_by_width=tuple(0 for _ in LOCKSTEP_WIDTHS),
-            group_nnz_max=tuple(0 for _ in RGCSR_GROUP_SIZES))
+            row_nnz_rle=_pack_rle(np.zeros(m, dtype=np.int64)))
+        object.__setattr__(fp0, "_structure", (indptr, indices, (m, n)))
+        return fp0
 
     mean = float(row_nnz.mean())
     cv = float(row_nnz.std() / mean) if mean > 0 else 0.0
@@ -215,14 +288,11 @@ def fingerprint(a, params: DtansParams = PAPER,
     row_of = np.repeat(np.arange(m, dtype=np.int64), row_nnz)
     bandwidth = int(np.abs(indices - row_of).max())
 
-    # One lock-step pass per distinct width; SELL's padding feature is
-    # the same quantity at SELL_SLICE_HEIGHT (cannot diverge from the
-    # lockstep tuple).
-    ls = {w: lockstep_elems(row_nnz, w)
-          for w in set(LOCKSTEP_WIDTHS) | {SELL_SLICE_HEIGHT}}
-    sell_padded = ls[SELL_SLICE_HEIGHT]
-    lockstep = tuple(ls[w] for w in LOCKSTEP_WIDTHS)
-    gmax = tuple(max_group_nnz(row_nnz, g) for g in RGCSR_GROUP_SIZES)
+    # SELL's padding feature is `Fingerprint.lockstep` evaluated at
+    # SELL_SLICE_HEIGHT; arbitrary widths derive exactly from the
+    # row-nnz RLE below (no fallback).
+    sell_padded = lockstep_elems(row_nnz, SELL_SLICE_HEIGHT)
+    rle = _pack_rle(row_nnz)
 
     ell = params.l
     syms_per_row = 2 * row_nnz
@@ -252,7 +322,7 @@ def fingerprint(a, params: DtansParams = PAPER,
                            return_counts=True)
     m_bits, _ = codeable_bits(mcounts, params, esc_raw_bits=esc_raw_value)
 
-    return Fingerprint(
+    fp = Fingerprint(
         rows=m, cols=n, nnz=nnz, value_bytes=vb,
         row_nnz_mean=mean, row_nnz_cv=cv, row_nnz_max=int(row_nnz.max()),
         bandwidth=bandwidth, sell_padded_nnz=sell_padded,
@@ -266,5 +336,11 @@ def fingerprint(a, params: DtansParams = PAPER,
         delta_stream_bits=d_bits, value_stream_bits=v_bits,
         merged_stream_bits=m_bits,
         delta_escape_frac=d_esc, value_escape_frac=v_esc,
-        lockstep_by_width=lockstep, group_nnz_max=gmax,
+        row_nnz_rle=rle,
     )
+    # Stash the CSR structure for lazy derived features that are too
+    # expensive to compute eagerly (`block_nonempty`). Not a field:
+    # excluded from equality and `key` (it is pure input content, which
+    # checksum + RLE + the other features already fingerprint).
+    object.__setattr__(fp, "_structure", (indptr, indices, (m, n)))
+    return fp

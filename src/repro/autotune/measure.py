@@ -40,20 +40,16 @@ import time
 import numpy as np
 
 from repro.autotune.cache import atomic_merge_json, default_cache_path
-from repro.autotune.cost_model import (DECODE_FORMATS, LOCKSTEP_FORMATS,
-                                       V5E, Candidate, MachineModel,
+from repro.autotune.cost_model import (V5E, Candidate, MachineModel,
                                        candidate_time, spmv_bytes)
 from repro.autotune.fingerprint import fingerprint
 from repro.core.params import PAPER, DtansParams
+from repro.sparse.registry import get_format, parse_config
 
 #: Timing defaults: one warmup call (compilation / trace caching), then
 #: a median over this many timed calls.
 DEFAULT_WARMUP = 1
 DEFAULT_REPEATS = 3
-
-#: Slice height of the SELL runner — matches the cost model's exact
-#: `sell_nbytes` / `sell_padded_nnz` features (SELL_SLICE_HEIGHT).
-SELL_RUNNER_SLICE = 32
 
 _PROFILE_ENV = "REPRO_MACHINE_PROFILES"
 
@@ -91,142 +87,58 @@ def _default_x(a) -> np.ndarray:
     return rng.standard_normal(a.shape[1]).astype(a.values.dtype)
 
 
-def _rowseq_runner(a, x, interpret):
-    """Row-sequential (CSR/COO) runner: gather + scatter-add under jit.
-
-    There is no Pallas kernel for the row-sequential formats (the paper
-    abandons them on GPUs for the same reason the cost model charges
-    ``row_seq_penalty``); their measurable stand-in is the XLA
-    scatter-add SpMV both formats lower to. ``interpret`` is accepted
-    for signature uniformity and ignored.
-    """
-    import jax
-    import jax.numpy as jnp
-    m = a.shape[0]
-    rows = jnp.asarray(np.repeat(np.arange(m, dtype=np.int64),
-                                 np.diff(a.indptr)))
-    idx = jnp.asarray(a.indices)
-    vals = jnp.asarray(a.values)
-    xj = jnp.asarray(x, dtype=a.values.dtype)
-
-    @jax.jit
-    def run():
-        return jnp.zeros(m, vals.dtype).at[rows].add(vals * xj[idx])
-
-    return run
-
-
-def _dense_runner(a, x, interpret):
-    """Dense ``A @ x`` under jit — the bandwidth anchor of calibration."""
-    import jax
-    import jax.numpy as jnp
-    d = jnp.asarray(a.to_dense())
-    xj = jnp.asarray(x, dtype=d.dtype)
-    return jax.jit(lambda: d @ xj)
-
-
-def spmv_runner(a, fmt: str, *, lane_width: int | None = None,
-                group_size: int | None = None, shared_table: bool = True,
-                params: DtansParams = PAPER, x: np.ndarray | None = None,
-                interpret: bool = True, artifacts: dict | None = None):
+def spmv_runner(a, fmt: str, *, params: DtansParams = PAPER,
+                x: np.ndarray | None = None, interpret: bool = True,
+                artifacts: dict | None = None, **knobs):
     """Zero-arg callable running one ``y = A x`` through the registered
     kernel path of (format, config); feed it to `time_kernel`.
 
-    ``artifacts`` (any mutable mapping) memoizes the expensive dtANS
-    encodes under the same ``(family, width/G, shared)`` keys the
-    exhaustive oracle uses — benchmarks that already ran the oracle time
-    kernels without re-encoding.
-
-    Registered paths: ``ops.spmv`` (dtans / rgcsr_dtans),
-    ``ops.sell_spmv``, ``ops.rgcsr_spmv``, the XLA scatter-add SpMV for
-    the kernel-less row-sequential formats (csr / coo), and a jit'd
-    dense ``A @ x`` (``fmt="dense"``, calibration's bandwidth anchor).
+    Registry-generic: ``**knobs`` is the format's own knob surface
+    (``lane_width=32``, ``group_size=8``, ``block_shape=(4, 4)``, ...);
+    None values and knobs the format does not declare are dropped, so a
+    caller may pass a candidate's full knob set. `FormatSpec.pack`
+    builds the runnable artifact (``artifacts`` memoizes expensive
+    encodes under `FormatSpec.artifact_key`, shared with the exhaustive
+    oracle — a benchmark that already ran the oracle times kernels
+    without re-encoding) and `FormatSpec.runner` binds it to the
+    format's ``spmv_fn`` (``ops.spmv`` for the dtANS families,
+    ``ops.sell_spmv`` / ``ops.rgcsr_spmv`` / ``ops.bcsr_spmv`` for the
+    plain kernels, the XLA scatter-add SpMV for the kernel-less
+    row-sequential formats, and a jit'd dense ``A @ x`` — calibration's
+    bandwidth anchor).
     """
-    from repro.kernels import ops
+    try:
+        spec = get_format(fmt)
+    except ValueError as e:
+        raise ValueError(f"no registered SpMV runner for format "
+                         f"{fmt!r}") from e
     x = _default_x(a) if x is None else x
-    enc = artifacts if artifacts is not None else {}
-
-    if fmt in ("csr", "coo"):
-        return _rowseq_runner(a, x, interpret)
-    if fmt == "dense":
-        return _dense_runner(a, x, interpret)
-    if fmt == "sell":
-        from repro.kernels.sell_spmv import pack_sell
-        ps = pack_sell(a, lane_width=SELL_RUNNER_SLICE)
-        return lambda: ops.sell_spmv(ps, x, interpret=interpret)
-    if fmt == "rgcsr":
-        from repro.kernels.rgcsr_spmv import pack_rgcsr
-        from repro.sparse.rgcsr import RGCSR
-        pr = pack_rgcsr(RGCSR.from_csr(a, int(group_size)))
-        return lambda: ops.rgcsr_spmv(pr, x, interpret=interpret)
-    if fmt == "dtans":
-        from repro.core.csr_dtans import encode_matrix
-        key = ("dtans", int(lane_width), bool(shared_table))
-        mat = enc.get(key)
-        if not hasattr(mat, "nbytes"):       # miss or legacy int entry
-            mat = encode_matrix(a, params=params, lane_width=int(lane_width),
-                                shared_table=bool(shared_table))
-            enc[key] = mat
-        # get_packed caches the pack on the encoded object, so repeat
-        # measurements of a memoized artifact never re-pack.
-        pm = ops.get_packed(mat)
-        return lambda: ops.spmv(pm, x, interpret=interpret)
-    if fmt == "rgcsr_dtans":
-        from repro.core.rgcsr_dtans import encode_rgcsr_matrix
-        key = ("rgcsr_dtans", int(group_size), bool(shared_table))
-        mat = enc.get(key)
-        if not hasattr(mat, "nbytes"):
-            mat = encode_rgcsr_matrix(a, group_size=int(group_size),
-                                      params=params,
-                                      shared_table=bool(shared_table))
-            enc[key] = mat
-        pm = ops.get_packed(mat)
-        return lambda: ops.spmv(pm, x, interpret=interpret)
-    raise ValueError(f"no registered SpMV runner for format {fmt!r}")
+    packed = spec.pack(a, params=params, artifacts=artifacts,
+                       **spec.filter_knobs(knobs))
+    return spec.runner(packed, x, interpret=interpret)
 
 
-def measure_config(a, fmt: str, *, lane_width: int | None = None,
-                   group_size: int | None = None,
-                   shared_table: bool = True,
-                   params: DtansParams = PAPER,
+def measure_config(a, fmt: str, *, params: DtansParams = PAPER,
                    x: np.ndarray | None = None, interpret: bool = True,
                    warmup: int = DEFAULT_WARMUP,
                    repeats: int = DEFAULT_REPEATS,
-                   artifacts: dict | None = None) -> float:
-    """Measured median seconds of one (format, config) SpMV on ``a``."""
-    fn = spmv_runner(a, fmt, lane_width=lane_width, group_size=group_size,
-                     shared_table=shared_table, params=params, x=x,
-                     interpret=interpret, artifacts=artifacts)
+                   artifacts: dict | None = None, **knobs) -> float:
+    """Measured median seconds of one (format, config) SpMV on ``a``
+    (``**knobs`` as in `spmv_runner`)."""
+    fn = spmv_runner(a, fmt, params=params, x=x, interpret=interpret,
+                     artifacts=artifacts, **knobs)
     return time_kernel(fn, warmup=warmup, repeats=repeats)
 
 
 def parse_config_name(name: str) -> dict:
-    """Invert the canonical config names (`dtans_config_name` et al.)
-    into `measure_config` keyword arguments.
-
-    Accepted: ``csr`` / ``coo`` / ``sell`` / ``dense``,
-    ``rgcsr[G=8]``, ``dtans[w=32,shared|split]``,
-    ``rgcsr_dtans[G=8,shared|split]``.
+    """Invert the canonical config names (`FormatSpec.encode_knobs`)
+    into `measure_config` keyword arguments via the registry's
+    `decode_knobs` — e.g. ``"rgcsr_dtans[G=8,shared]"`` ->
+    ``{"fmt": "rgcsr_dtans", "group_size": 8, "shared_table": True}``.
+    Raises ValueError for unregistered formats or unknown components.
     """
-    if "[" not in name:
-        if name not in ("csr", "coo", "sell", "dense"):
-            raise ValueError(f"unknown config name {name!r}")
-        return {"fmt": name}
-    fmt, _, rest = name.partition("[")
-    parts = rest.rstrip("]").split(",")
-    out: dict = {"fmt": fmt}
-    for p in parts:
-        if p == "shared":
-            out["shared_table"] = True
-        elif p == "split":
-            out["shared_table"] = False
-        elif p.startswith("G="):
-            out["group_size"] = int(p[2:])
-        elif p.startswith("w="):
-            out["lane_width"] = int(p[2:])
-        else:
-            raise ValueError(f"unknown config component {p!r} in {name!r}")
-    return out
+    spec, knobs = parse_config(name)
+    return {"fmt": spec.name, **knobs}
 
 
 def measure_named(a, config_name: str, *, params: DtansParams = PAPER,
@@ -247,14 +159,12 @@ def measure_candidate(a, cand: Candidate, *, params: DtansParams = PAPER,
                       warmup: int = DEFAULT_WARMUP,
                       repeats: int = DEFAULT_REPEATS,
                       artifacts: dict | None = None) -> float:
-    """`measure_config` keyed off a cost-model `Candidate`."""
-    return measure_config(
-        a, cand.fmt, lane_width=cand.lane_width,
-        group_size=cand.group_size,
-        shared_table=bool(cand.shared_table)
-        if cand.shared_table is not None else True,
-        params=params, x=x, interpret=interpret, warmup=warmup,
-        repeats=repeats, artifacts=artifacts)
+    """`measure_config` keyed off a cost-model `Candidate` (the
+    candidate's knobs tuple carries the full configuration)."""
+    return measure_config(a, cand.fmt, params=params, x=x,
+                          interpret=interpret, warmup=warmup,
+                          repeats=repeats, artifacts=artifacts,
+                          **cand.knobs_dict())
 
 
 # --------------------------------------------------------------------------
@@ -320,47 +230,18 @@ def _calibration_suite(small: bool = True) -> dict:
             for k, v in out.items()}
 
 
-#: (fmt, lane_width, group_size) configurations measured per sweep
-#: matrix — one representative per work-term family.
+#: Canonical config names measured per sweep matrix — one
+#: representative per work-term family. Parsed through the registry, so
+#: every knob a row depends on (the SELL slice height included) comes
+#: from the config itself, never a hard-coded constant that could drift
+#: from what the runner actually packed.
 CALIBRATION_CONFIGS = (
-    ("csr", None, None),
-    ("sell", None, None),
-    ("rgcsr", None, 8),
-    ("dtans", 32, None),
-    ("rgcsr_dtans", None, 8),
+    "csr",
+    "sell",
+    "rgcsr[G=8]",
+    "dtans[w=32,shared]",
+    "rgcsr_dtans[G=8,shared]",
 )
-
-
-def _exact_nbytes(a, fmt: str, *, lane_width=None, group_size=None,
-                  shared_table=True, params=PAPER,
-                  artifacts: dict | None = None) -> int:
-    """Byte-exact size of (format, config) on ``a`` — constructed, not
-    estimated, so calibration residuals are purely about time."""
-    from repro.sparse.formats import COO, SELL
-    from repro.sparse.rgcsr import rgcsr_nbytes_exact
-    if fmt == "csr":
-        return a.nbytes
-    if fmt == "coo":
-        return COO.from_csr(a).nbytes
-    if fmt == "sell":
-        return SELL.from_csr(a, slice_height=SELL_RUNNER_SLICE).nbytes
-    if fmt == "rgcsr":
-        return rgcsr_nbytes_exact(a.row_nnz(), group_size,
-                                  a.values.dtype.itemsize)
-    enc = artifacts if artifacts is not None else {}
-    # spmv_runner populated `artifacts` with the encoded object.
-    key = (fmt, int(lane_width if fmt == "dtans" else group_size),
-           bool(shared_table))
-    mat = enc.get(key)
-    if hasattr(mat, "nbytes"):
-        return int(mat.nbytes)
-    if fmt == "dtans":
-        from repro.core.csr_dtans import encode_matrix
-        return encode_matrix(a, params=params, lane_width=lane_width,
-                             shared_table=shared_table).nbytes
-    from repro.core.rgcsr_dtans import encode_rgcsr_matrix
-    return encode_rgcsr_matrix(a, group_size=group_size, params=params,
-                               shared_table=shared_table).nbytes
 
 
 def _clamped_lstsq(A: np.ndarray, t: np.ndarray,
@@ -418,37 +299,33 @@ def calibrate(matrices: dict | None = None, *, base: MachineModel = V5E,
     for mname, a in mats.items():
         fp = fingerprint(a, params=params)
         enc: dict = {}
-        for fmt, w, g in configs:
+        for cfg_name in configs:
+            spec, knobs = parse_config(cfg_name)
             t_meas = measure_config(
-                a, fmt, lane_width=w, group_size=g, params=params,
-                interpret=interpret, warmup=warmup, repeats=repeats,
-                artifacts=enc)
-            nbytes = _exact_nbytes(a, fmt, lane_width=w, group_size=g,
-                                   params=params, artifacts=enc)
-            width = g if fmt in ("rgcsr", "rgcsr_dtans") else (
-                w if fmt == "dtans" else SELL_RUNNER_SLICE)
-            work = (fp.lockstep(width) if fmt in LOCKSTEP_FORMATS
-                    else fp.nnz)
+                a, spec.name, params=params, interpret=interpret,
+                warmup=warmup, repeats=repeats, artifacts=enc, **knobs)
+            nbytes = spec.nbytes_constructed(a, params=params,
+                                             artifacts=enc, **knobs)
+            # The design-matrix row IS the spec's cost-term split — the
+            # same knobs the runner packed with (the SELL slice height
+            # comes from the config, not a module constant).
+            terms = spec.cost_terms(fp, **knobs)
             moved = spmv_bytes(nbytes, fp.cols, fp.rows, fp.value_bytes)
             hit = min(moved, base.cache_bytes) if warm else 0.0
             feats.append([
-                moved - hit,                                  # 1/hbm_bw
-                hit,                                          # 1/cache_bw
-                work if fmt in LOCKSTEP_FORMATS else 0.0,     # c_ls
-                work if fmt in ("csr", "coo") else 0.0,       # c_rs
-                work if fmt in DECODE_FORMATS else 0.0,       # c_dec
+                moved - hit,          # 1/hbm_bw
+                hit,                  # 1/cache_bw
+                terms.lockstep,       # c_ls
+                terms.rowseq,         # c_rs
+                terms.decode,         # c_dec
             ])
             meas.append(t_meas)
-            t_before = candidate_time(fp, fmt, nbytes, warm=warm,
-                                      machine=base, lane_width=w,
-                                      group_size=g)
-            cname = Candidate(fmt=fmt, nbytes=nbytes, modeled_time=0.0,
-                              exact_size=True, lane_width=w,
-                              shared_table=True,
-                              group_size=g).config_name
+            t_before = candidate_time(fp, spec.name, nbytes, warm=warm,
+                                      machine=base, **knobs)
             points.append(CalibrationPoint(
-                matrix=mname, config_name=cname, fmt=fmt, nbytes=nbytes,
-                work_elems=int(work), measured=t_meas,
+                matrix=mname, config_name=spec.encode_knobs(knobs),
+                fmt=spec.name, nbytes=int(nbytes),
+                work_elems=int(terms.work_elems), measured=t_meas,
                 modeled_before=t_before))
 
     A = np.asarray(feats, dtype=np.float64)

@@ -1,91 +1,70 @@
 """Exhaustive exact-size oracle — the AlphaSparse stand-in.
 
-Constructs/encodes EVERY candidate configuration of every format family
-for a matrix and evaluates the same `cost_model.spmv_time` the selector
-uses, but with byte-exact sizes everywhere (the selector works from
-fingerprint estimates for the entropy-coded families). The argmin is the
-paper-Fig. 9 "best format per matrix" that AlphaSparse pays hours of
-tuning for; `select()`'s regret is measured against it.
+Constructs/encodes EVERY candidate configuration of every selectable
+format registered in `repro.sparse.registry` for a matrix and evaluates
+the same `cost_model.candidate_time` the selector uses, but with
+byte-exact sizes everywhere (the selector works from fingerprint
+estimates for the entropy-coded families). The argmin is the paper-
+Fig. 9 "best format per matrix" that AlphaSparse pays hours of tuning
+for; `select()`'s regret is measured against it.
 
 This is the single oracle shared by benchmarks/bench_format_selection.py
-and tests/test_autotune.py — selector and oracle evaluate one formula
-(`cost_model.candidate_time`), so a cost-model edit can never make them
-disagree by accident, only by genuinely changing a modeled argmin (which
-the decision-snapshot test then surfaces).
+and tests/test_autotune.py — selector and oracle iterate one registry
+and evaluate one formula, so a cost-model or registry edit can never
+make them disagree by accident, only by genuinely changing a modeled
+argmin (which the decision-snapshot test then surfaces). A format
+registered through the registry joins the oracle with no edit here.
 """
 
 from __future__ import annotations
 
-from repro.autotune.cost_model import (DTANS_LANE_WIDTHS,
-                                       DTANS_SHARED_TABLE, V5E,
-                                       MachineModel, candidate_time,
-                                       dtans_config_name,
-                                       rgcsr_config_name,
-                                       rgcsr_dtans_config_name)
+from repro.autotune.cost_model import V5E, MachineModel, candidate_time
 from repro.autotune.fingerprint import fingerprint
 from repro.core.params import PAPER, DtansParams
-from repro.sparse.formats import COO, SELL
-from repro.sparse.rgcsr import RGCSR_GROUP_SIZES, rgcsr_nbytes_exact
+from repro.sparse.registry import format_names, get_format
 
 
 def oracle_times(a, *, warm: bool = True, machine: MachineModel = V5E,
                  params: DtansParams = PAPER,
-                 lane_widths: tuple = DTANS_LANE_WIDTHS,
-                 group_sizes: tuple = RGCSR_GROUP_SIZES,
+                 formats: tuple | None = None,
+                 lane_widths: tuple | None = None,
+                 group_sizes: tuple | None = None,
+                 block_shapes: tuple | None = None,
                  encode_cache: dict | None = None) -> dict[str, float]:
     """config_name -> exact-size modeled seconds, for every candidate.
 
     ``encode_cache`` (any mutable mapping) memoizes the expensive dtANS
     encodes across repeated calls (e.g. warm and cold evaluation of the
-    same matrix); keys are (family, width/G, shared), values the encoded
-    matrices themselves — `repro.autotune.measure.spmv_runner` and
+    same matrix) under `FormatSpec.artifact_key` —
+    `repro.autotune.measure.spmv_runner` and
     `search.select(artifacts=...)` share the same convention, so a
     measurement pass after an oracle run never re-encodes. (Legacy
     caches holding bare byte counts are transparently re-encoded.)
     """
-    from repro.core.csr_dtans import encode_matrix
-    from repro.core.rgcsr_dtans import encode_rgcsr_matrix
-
     fp = fingerprint(a, params=params)
     enc = encode_cache if encode_cache is not None else {}
+    overrides = {"lane_width": lane_widths, "group_size": group_sizes,
+                 "block_shape": block_shapes}
+    if formats is None:
+        formats = format_names(selectable=True)
     times: dict[str, float] = {}
-
-    def t(fmt, nbytes, lane_width=None, group_size=None):
-        return candidate_time(fp, fmt, nbytes, warm=warm, machine=machine,
-                              lane_width=lane_width, group_size=group_size)
-
-    times["csr"] = t("csr", a.nbytes)
-    times["coo"] = t("coo", COO.from_csr(a).nbytes)
-    times["sell"] = t("sell", SELL.from_csr(a).nbytes)
-    rnnz = a.row_nnz()
-    vb = a.values.dtype.itemsize
-    for g in group_sizes:
-        times[rgcsr_config_name(g)] = t(
-            "rgcsr", rgcsr_nbytes_exact(rnnz, g, vb), group_size=g)
-    for w in lane_widths:
-        for shared in DTANS_SHARED_TABLE:
-            key = ("dtans", w, shared)
-            mat = enc.get(key)
-            if not hasattr(mat, "nbytes"):   # miss or legacy int entry
-                mat = encode_matrix(a, params=params, lane_width=w,
-                                    shared_table=shared)
-                enc[key] = mat
-            times[dtans_config_name(w, shared)] = t(
-                "dtans", mat.nbytes, lane_width=w)
-    for g in group_sizes:
-        key = ("rgcsr_dtans", g, True)
-        mat = enc.get(key)
-        if not hasattr(mat, "nbytes"):
-            mat = encode_rgcsr_matrix(a, group_size=g, params=params,
-                                      shared_table=True)
-            enc[key] = mat
-        times[rgcsr_dtans_config_name(g, True)] = t(
-            "rgcsr_dtans", mat.nbytes, group_size=g)
+    for fmt in formats:
+        spec = get_format(fmt)
+        for knobs in spec.knob_grid(fp, overrides):
+            b = spec.nbytes_constructed(a, params=params, artifacts=enc,
+                                        **knobs)
+            times[spec.encode_knobs(knobs)] = candidate_time(
+                fp, fmt, b, warm=warm, machine=machine, **knobs)
     return times
 
 
 def oracle_best(a, **kwargs) -> tuple[str, float, dict[str, float]]:
     """(best config_name, its modeled time, all times) for matrix ``a``."""
     times = oracle_times(a, **kwargs)
+    if not times:
+        raise ValueError(
+            "no admitted candidate configuration for the requested "
+            "formats on this matrix (matrix-adaptive knob grids pruned "
+            "every sweep point)")
     best = min(times, key=times.get)
     return best, times[best], times

@@ -1,10 +1,10 @@
 """Candidate search: the `select()` entry point of the autotuner.
 
-``select(csr)`` fingerprints the matrix, enumerates candidate formats
-under the machine cost model, optionally *refines* the top candidates by
-actually constructing them (exact bytes instead of entropy estimates),
-and returns the modeled-argmin `Decision`. Two cache layers make repeat
-calls cheap:
+``select(csr)`` fingerprints the matrix, enumerates every selectable
+format registered in `repro.sparse.registry` under the machine cost
+model, optionally *refines* the top candidates by actually constructing
+them (exact bytes instead of entropy estimates), and returns the
+modeled-argmin `Decision`. Two cache layers make repeat calls cheap:
 
   * a per-process identity memo — a warm ``select`` on the same CSR
     object is a dict lookup (~1 us; below 1% of one modeled SpMVM pass
@@ -29,26 +29,41 @@ next to its ``modeled_time``.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import weakref
 
 from repro.autotune.cache import DecisionCache, default_cache
-from repro.autotune.cost_model import (DTANS_LANE_WIDTHS, V5E, Candidate,
-                                       MachineModel, candidate_time,
-                                       candidates)
+from repro.autotune.cost_model import (V5E, Candidate, MachineModel,
+                                       candidate_time, candidates)
 from repro.autotune.fingerprint import Fingerprint, fingerprint
 from repro.core.params import PAPER, DtansParams
-from repro.sparse.rgcsr import RGCSR_GROUP_SIZES
+from repro.sparse.registry import (KnobbedConfigMixin, format_names,
+                                   get_format)
 
-ALL_FORMATS = ("csr", "coo", "sell", "rgcsr", "dtans", "rgcsr_dtans")
+#: Selectable format families at import time (the function defaults use
+#: the live registry, so formats registered later still join).
+ALL_FORMATS = format_names(selectable=True)
+
+
+def _knobs_from_json(v) -> tuple:
+    """JSON lists -> the canonical knobs tuple (block shapes become
+    tuples again)."""
+    return tuple((k, tuple(x) if isinstance(x, list) else x)
+                 for k, x in v)
 
 
 @dataclasses.dataclass(frozen=True)
-class Decision:
-    """Outcome of one format selection (JSON round-trippable)."""
+class Decision(KnobbedConfigMixin):
+    """Outcome of one format selection (JSON round-trippable).
+
+    ``knobs`` is the canonical ``((name, value), ...)`` configuration
+    tuple of the winning format — the registry's generic replacement
+    for per-format fields; `lane_width` / `shared_table` /
+    `group_size` / `block_shape` come from `KnobbedConfigMixin`.
+    """
 
     fmt: str
-    lane_width: int | None
-    shared_table: bool | None
+    knobs: tuple
     nbytes: int
     modeled_time: float
     exact_size: bool
@@ -56,7 +71,6 @@ class Decision:
     machine: str
     fingerprint_key: str
     refined: bool
-    group_size: int | None = None    # rgcsr family only
     # Median wall-clock seconds of the winner's real kernel when the
     # selection ran with ``measure=True``; None for modeled-only runs.
     # Modeled and measured seconds are different currencies (interpret
@@ -67,22 +81,9 @@ class Decision:
     # debugging.
     leaderboard: tuple = ()
 
-    @property
-    def config_name(self) -> str:
-        from repro.autotune.cost_model import (dtans_config_name,
-                                               rgcsr_config_name,
-                                               rgcsr_dtans_config_name)
-        if self.fmt == "dtans":
-            return dtans_config_name(self.lane_width, self.shared_table)
-        if self.fmt == "rgcsr":
-            return rgcsr_config_name(self.group_size)
-        if self.fmt == "rgcsr_dtans":
-            return rgcsr_dtans_config_name(self.group_size,
-                                           self.shared_table)
-        return self.fmt
-
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
+        d["knobs"] = [list(kv) for kv in self.knobs]
         d["leaderboard"] = [list(row) for row in self.leaderboard]
         return d
 
@@ -90,8 +91,10 @@ class Decision:
     def from_dict(cls, d: dict) -> "Decision":
         """Raises ValueError on schema drift (old/foreign cache files);
         `select` treats that as a cache miss and recomputes. Fields with
-        defaults (``measured_time``, ``group_size``, ...) may be absent —
-        a cache written before a field existed stays valid."""
+        defaults (``measured_time``, ``leaderboard``) may be absent — a
+        cache written before a field existed stays valid. ``knobs`` is
+        required: pre-registry caches carrying per-format fields fail
+        here and recompute."""
         fields = {f.name for f in dataclasses.fields(cls)}
         required = {f.name for f in dataclasses.fields(cls)
                     if f.default is dataclasses.MISSING
@@ -100,6 +103,7 @@ class Decision:
             raise ValueError(f"missing decision fields: "
                              f"{sorted(required - set(d))}")
         d = {k: v for k, v in d.items() if k in fields}
+        d["knobs"] = _knobs_from_json(d["knobs"])
         d["leaderboard"] = tuple(tuple(row) for row in
                                  d.get("leaderboard", ()))
         try:
@@ -122,54 +126,29 @@ def _refine(a, cand: Candidate, fp: Fingerprint, *, warm: bool,
             artifacts: dict) -> Candidate:
     """Replace an estimated candidate size with the constructed truth.
 
-    ``artifacts`` memoizes encoded matrices under the oracle's
-    ``(family, width/G, shared)`` keys so a later measurement pass (or a
-    caller that already ran the oracle) never re-encodes."""
+    Registry-generic: `FormatSpec.nbytes_constructed` builds/encodes
+    the configuration; ``artifacts`` memoizes expensive artifacts under
+    `FormatSpec.artifact_key`, shared with the oracle and the
+    measurement pass so nothing re-encodes."""
     if cand.exact_size:
         return cand
-    if cand.fmt == "dtans":
-        from repro.core.csr_dtans import encode_matrix
-        key = ("dtans", cand.lane_width, cand.shared_table)
-        mat = artifacts.get(key)
-        if not hasattr(mat, "nbytes"):       # miss or legacy int entry
-            mat = encode_matrix(a, params=params,
-                                lane_width=cand.lane_width,
-                                shared_table=cand.shared_table)
-            artifacts[key] = mat
-        b = mat.nbytes
-    elif cand.fmt == "rgcsr_dtans":
-        from repro.core.rgcsr_dtans import encode_rgcsr_matrix
-        key = ("rgcsr_dtans", cand.group_size, cand.shared_table)
-        mat = artifacts.get(key)
-        if not hasattr(mat, "nbytes"):
-            mat = encode_rgcsr_matrix(a, group_size=cand.group_size,
-                                      params=params,
-                                      shared_table=cand.shared_table)
-            artifacts[key] = mat
-        b = mat.nbytes
-    elif cand.fmt == "rgcsr":
-        # Estimated only for group sizes outside RGCSR_GROUP_SIZES
-        # (fingerprint lacks their group-nnz feature); the histogram
-        # formula on the real row-nnz is the constructed truth.
-        from repro.sparse.rgcsr import rgcsr_nbytes_exact
-        b = rgcsr_nbytes_exact(a.row_nnz(), cand.group_size,
-                               fp.value_bytes)
-    else:
-        return cand
-    t = candidate_time(fp, cand.fmt, b, warm=warm, machine=machine,
-                       lane_width=cand.lane_width,
-                       group_size=cand.group_size)
-    return dataclasses.replace(cand, nbytes=b, modeled_time=t,
+    spec = get_format(cand.fmt)
+    kn = cand.knobs_dict()
+    b = spec.nbytes_constructed(a, params=params, artifacts=artifacts,
+                                **kn)
+    t = candidate_time(fp, cand.fmt, b, warm=warm, machine=machine, **kn)
+    return dataclasses.replace(cand, nbytes=int(b), modeled_time=t,
                                exact_size=True)
 
 
 def select(a, *, machine: MachineModel = V5E, warm: bool = True,
-           formats: tuple = ALL_FORMATS, budget: int = 0,
+           formats: tuple | None = None, budget: int = 0,
            measure: bool = False, measure_warmup: int = 1,
            measure_repeats: int = 3, interpret: bool = True,
            params: DtansParams = PAPER,
-           lane_widths: tuple = DTANS_LANE_WIDTHS,
-           group_sizes: tuple = RGCSR_GROUP_SIZES,
+           lane_widths: tuple | None = None,
+           group_sizes: tuple | None = None,
+           block_shapes: tuple | None = None,
            cache: DecisionCache | None = None,
            use_cache: bool = True,
            artifacts: dict | None = None) -> Decision:
@@ -179,7 +158,9 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
       a: `repro.sparse.formats.CSR` matrix.
       machine: chip model of the cost model.
       warm: model a cache-resident (True) or streaming (False) workload.
-      formats: candidate format families to consider.
+      formats: candidate format families to consider; None = every
+        selectable family in `repro.sparse.registry` (a format
+        registered there joins the sweep with no edit here).
       budget: number of top estimated candidates to construct for exact
         sizes before the final argmin (0 = fingerprint estimates only).
       measure: with ``budget > 0``, additionally wall-clock time the
@@ -192,27 +173,49 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
         (median-of-``measure_repeats`` after ``measure_warmup`` calls).
       interpret: run measured kernels in Pallas interpret mode (CPU CI
         fallback); pass ``False`` on an accelerator host.
-      group_sizes: RGCSR group sizes swept for the rgcsr families.
+      lane_widths / group_sizes / block_shapes: knob-domain overrides
+        for the formats declaring those knobs; None (default) sweeps
+        each format's own `FormatSpec.knob_domains` — built-in AND
+        third-party formats alike, matching what the exhaustive oracle
+        enumerates.
       cache: decision cache; ``None`` uses the process default
         (persistent on disk). Pass ``DecisionCache(path=None)`` for a
         memory-only cache.
       use_cache: disable both cache layers (for measurement).
       artifacts: optional mutable mapping memoizing encoded matrices
-        under the oracle's ``(family, width/G, shared)`` keys; callers
-        that already encoded candidates (benchmarks, the oracle) pass
-        theirs to skip re-encoding. Never part of the cache key.
+        under `FormatSpec.artifact_key`; callers that already encoded
+        candidates (benchmarks, the oracle) pass theirs to skip
+        re-encoding. Never part of the cache key.
     """
     if measure and budget <= 0:
         raise ValueError("measure=True requires budget > 0 (only the "
                          "refined head is packed and timed)")
+    if formats is None:
+        formats = format_names(selectable=True)
     cache = cache if cache is not None else default_cache()
+
+    def sweep(vals, render) -> str | None:
+        """Canonical form of one knob-domain override (None = the
+        specs' own domains, also the cache-key spelling)."""
+        return None if vals is None else ",".join(render(v)
+                                                  for v in vals)
+
+    sweeps = (sweep(lane_widths, str), sweep(group_sizes, str),
+              sweep(block_shapes, lambda b: f"{b[0]}x{b[1]}"))
+    # The requested formats' LIVE knob domains enter both cache keys: a
+    # release (or in-process re-registration) that changes a format's
+    # default sweep must invalidate decisions that never priced the new
+    # sweep points.
+    doms = ";".join(
+        f"{f}:" + ",".join(f"{k}=" + "|".join(map(str, v))
+                           for k, v in get_format(f).knob_domains.items())
+        for f in formats)
     # The cache object is part of the memo key: a repeat select with a
     # *different* cache must consult (and populate) that cache, not
     # short-circuit on the memo.
-    cfg = (machine, warm, tuple(formats), int(budget),
-           tuple(lane_widths), tuple(group_sizes), params, cache,
-           bool(measure), int(measure_warmup), int(measure_repeats),
-           bool(interpret))
+    cfg = (machine, warm, tuple(formats), int(budget), sweeps, doms,
+           params, cache, bool(measure), int(measure_warmup),
+           int(measure_repeats), bool(interpret))
     if use_cache:
         hit = _memo.get(id(a))
         if hit is not None and hit[0]() is a and hit[1] == cfg:
@@ -222,8 +225,10 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
     pp = params
     key_parts = [fp.key(), machine.signature(), f"warm={int(warm)}",
                  ",".join(formats), f"budget={int(budget)}",
-                 ",".join(str(w) for w in lane_widths),
-                 "G" + ",".join(str(g) for g in group_sizes),
+                 "w:" + (sweeps[0] if sweeps[0] is not None else "def"),
+                 "G:" + (sweeps[1] if sweeps[1] is not None else "def"),
+                 "B:" + (sweeps[2] if sweeps[2] is not None else "def"),
+                 "doms:" + hashlib.sha1(doms.encode()).hexdigest()[:12],
                  f"w{pp.w_bits}k{pp.k_bits}l{pp.l}o{pp.o}"
                  f"f{pp.f}m{pp.m_bits}"]
     if measure:
@@ -246,7 +251,17 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
 
     cands = candidates(fp, machine=machine, warm=warm, params=params,
                        formats=tuple(formats), lane_widths=lane_widths,
-                       group_sizes=tuple(group_sizes))
+                       group_sizes=group_sizes,
+                       block_shapes=block_shapes)
+    if not cands:
+        # Possible since FormatSpec.admit: e.g. bcsr_dtans's fill-in
+        # guard prunes every block shape on scatter-structured
+        # matrices. Diagnosable error beats IndexError.
+        raise ValueError(
+            f"no admitted candidate configuration for formats "
+            f"{tuple(formats)} on this matrix (matrix-adaptive knob "
+            f"grids pruned every sweep point; widen `formats` or the "
+            f"knob overrides)")
     refined = False
     if budget > 0:
         arts = artifacts if artifacts is not None else {}
@@ -275,11 +290,10 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
 
     best = cands[0]
     dec = Decision(
-        fmt=best.fmt, lane_width=best.lane_width,
-        shared_table=best.shared_table, nbytes=best.nbytes,
+        fmt=best.fmt, knobs=best.knobs, nbytes=best.nbytes,
         modeled_time=best.modeled_time, exact_size=best.exact_size,
         warm=warm, machine=machine.name, fingerprint_key=fp.key(),
-        refined=refined, group_size=best.group_size,
+        refined=refined,
         measured_time=best.measured_time,
         leaderboard=tuple((c.config_name, c.nbytes, c.modeled_time,
                            c.measured_time) for c in cands[:5]),
@@ -300,18 +314,19 @@ def choose_dtans_config(a, *, machine: MachineModel = V5E,
                         cache: DecisionCache | None = None,
                         use_cache: bool = True,
                         artifacts: dict | None = None) -> Decision:
-    """Best entropy-coded configuration only: CSR-dtANS (lane width x
-    table sharing) or group-aligned RGCSR-dtANS (group size).
+    """Best entropy-coded configuration only: the ``decodes=True``
+    families of the registry (CSR-dtANS lane width x table sharing,
+    group-aligned RGCSR-dtANS, block-aligned BCSR-dtANS, ...).
 
     Used by `repro.serving.sparse_linear.SparseLinear`'s ``auto=True``
     path, where the family must decode on the fly but the knobs are
-    free. Both families run the same decode kernels, so the serving
-    stack is indifferent to which one wins. ``measure=True`` (with
-    ``budget > 0``) times the candidates' real kernels, exactly as in
-    `select`.
+    free. Every such family runs the same decode kernels, so the
+    serving stack is indifferent to which one wins. ``measure=True``
+    (with ``budget > 0``) times the candidates' real kernels, exactly
+    as in `select`.
     """
     return select(a, machine=machine, warm=warm,
-                  formats=("dtans", "rgcsr_dtans"),
+                  formats=format_names(selectable=True, decodes=True),
                   budget=budget, measure=measure, interpret=interpret,
                   params=params, cache=cache,
                   use_cache=use_cache, artifacts=artifacts)

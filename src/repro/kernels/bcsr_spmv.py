@@ -1,0 +1,104 @@
+"""BCSR SpMVM Pallas kernel (interpret-mode first, like sell_spmv).
+
+One program per block row. The block row's blocks live in VMEM as a
+(W, r, c) value tile plus a (W,) block-column vector (W = matrix-wide
+max blocks per block row — address padding only, like `pack.py`'s
+stream padding; padded slots carry block column -1 and zero values).
+The kernel expands each block column into its c absolute columns,
+gathers x once per block, and contracts the dense r x c tiles — no
+per-element index arithmetic, which is the format's whole bargain: the
+cost model charges BCSR plain lock-step work over the *filled* cells
+(`Fingerprint.block_fill_elems`), with no row-sequential penalty and no
+decode term.
+
+Structure mirrors `sell_spmv.py` / `rgcsr_spmv.py`: a dataclass pack
+product, a Pallas kernel over a 1-D block-row grid, and a pure-jnp
+oracle for tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.sparse.bcsr import BCSR
+
+
+@dataclasses.dataclass
+class PackedBCSR:
+    block_cols: np.ndarray  # (S, W) int32 block-column ids, -1 = padding
+    values: np.ndarray      # (S, W, r, c)
+    shape: tuple
+    block_shape: tuple
+
+
+def pack_bcsr(b: BCSR) -> PackedBCSR:
+    r, c = b.block_shape
+    S = b.n_block_rows
+    per_row = np.diff(b.block_ptr)
+    W = max(int(per_row.max()) if S else 0, 1)
+    cols = np.full((S, W), -1, dtype=np.int32)
+    vals = np.zeros((S, W, r, c), dtype=b.values.dtype)
+    if b.n_blocks:
+        # Vectorized scatter: each block lands at (its block row, its
+        # position within that row).
+        brow = np.repeat(np.arange(S, dtype=np.int64), per_row)
+        pos = np.arange(b.n_blocks, dtype=np.int64) - b.block_ptr[brow]
+        cols[brow, pos] = b.block_cols
+        vals[brow, pos] = b.values
+    return PackedBCSR(block_cols=cols, values=vals, shape=b.shape,
+                      block_shape=b.block_shape)
+
+
+def _bcsr_kernel(col_ref, val_ref, x_ref, y_ref):
+    cols = col_ref[0]         # (W,)
+    vals = val_ref[0]         # (W, r, c)
+    x = x_ref[...]
+    W, r, c = vals.shape
+    n = x.shape[0]
+    mask = cols >= 0
+    # absolute columns per block: (W, c), clipped into x (padded slots
+    # and out-of-bounds edge-block cells hold zero values, so the
+    # clipped gather contributes nothing)
+    colidx = jnp.maximum(cols, 0)[:, None] * c + \
+        jax.lax.broadcasted_iota(jnp.int32, (W, c), 1)
+    xg = jnp.take(x, jnp.clip(colidx, 0, n - 1), axis=0)   # (W, c)
+    contrib = jnp.where(mask[:, None, None], vals * xg[:, None, :], 0)
+    y_ref[0, :] = jnp.sum(contrib, axis=(0, 2))            # (r,)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bcsr_spmv_pallas(block_cols, val, x, interpret=True):
+    S, W, r, c = val.shape
+    n = x.shape[0]
+    return pl.pallas_call(
+        _bcsr_kernel,
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((1, W), lambda s: (s, 0)),
+            pl.BlockSpec((1, W, r, c), lambda s: (s, 0, 0, 0)),
+            pl.BlockSpec((n,), lambda s: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, r), lambda s: (s, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, r), val.dtype),
+        interpret=interpret,
+    )(block_cols, val, x)
+
+
+def bcsr_spmv_ref(block_cols: np.ndarray, val: np.ndarray, x: np.ndarray):
+    """Pure-jnp oracle for the BCSR kernel ((S, r) output)."""
+    x = jnp.asarray(x)
+    S, W, r, c = val.shape
+    n = x.shape[0]
+    mask = block_cols >= 0
+    colidx = jnp.maximum(block_cols, 0)[..., None] * c + \
+        jax.lax.broadcasted_iota(jnp.int32, (S, W, c), 2)
+    xg = jnp.take(x, jnp.clip(colidx, 0, n - 1), axis=0)   # (S, W, c)
+    contrib = jnp.where(mask[..., None, None],
+                        val * xg[:, :, None, :], 0)
+    return jnp.sum(contrib, axis=(1, 3))                   # (S, r)

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.csr_dtans import CSRdtANS
+from repro.kernels.bcsr_spmv import PackedBCSR, bcsr_spmv_pallas
 from repro.kernels.dtans_decode import dtans_decode_pallas
 from repro.kernels.dtans_spmv import dtans_spmv_pallas
 from repro.kernels.pack import PackedMatrix, pack_matrix
@@ -98,6 +99,22 @@ def rgcsr_spmv(pr: PackedRGCSR, x, y=None, *,
                             jnp.asarray(pr.nnz),
                             jnp.asarray(x, dtype=pr.values.dtype),
                             interpret=interpret)
+    out = acc.reshape(-1)[:m]
+    if y is not None:
+        out = out + jnp.asarray(y, dtype=out.dtype)
+    return out
+
+
+def bcsr_spmv(pb: PackedBCSR, x, y=None, *,
+              interpret: bool = True) -> jax.Array:
+    """Blocked-CSR SpMVM: y = A x + y (dense r x c tiles in kernel).
+
+    Shares the `spmv` / `sell_spmv` signature; see `sell_spmv`."""
+    m, _ = pb.shape
+    acc = bcsr_spmv_pallas(jnp.asarray(pb.block_cols),
+                           jnp.asarray(pb.values),
+                           jnp.asarray(x, dtype=pb.values.dtype),
+                           interpret=interpret)
     out = acc.reshape(-1)[:m]
     if y is not None:
         out = out + jnp.asarray(y, dtype=out.dtype)

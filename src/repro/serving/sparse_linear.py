@@ -54,10 +54,14 @@ class SparseLinear:
         With ``auto=True`` the ``lane_width`` / ``shared_table`` knobs are
         ignored and chosen per matrix by `repro.autotune` (fingerprint the
         pruned weight, pick the modeled-fastest entropy-coded
-        configuration — plain CSR-dtANS or group-aligned RGCSR-dtANS;
-        both run the same decode kernels, so serving is indifferent;
-        decisions persist in the autotune cache, so repeated serving runs
-        skip the search). ``autotune_budget`` > 0 additionally encodes the
+        configuration among every ``decodes=True`` family in
+        `repro.sparse.registry` — plain CSR-dtANS, group-aligned
+        RGCSR-dtANS, block-aligned BCSR-dtANS, ...; every such family
+        runs the same decode kernels, so serving is indifferent, and the
+        winning spec's `FormatSpec.encode` builds the artifact — no
+        per-format branch here; decisions persist in the autotune cache,
+        so repeated serving runs skip the search). ``autotune_budget`` >
+        0 additionally encodes the
         top candidates to refine estimated sizes into exact ones;
         ``autotune_measure=True`` further wall-clock times those
         candidates' decode kernels and picks the measured-fastest
@@ -76,19 +80,15 @@ class SparseLinear:
         decision = None
         if auto:
             from repro.autotune import V5E, choose_dtans_config
+            from repro.sparse.registry import get_format
             decision = choose_dtans_config(
                 pruned, warm=True, budget=autotune_budget,
                 measure=autotune_measure,
                 machine=autotune_machine
                 if autotune_machine is not None else V5E,
                 cache=autotune_cache)
-            lane_width = decision.lane_width
-            shared_table = decision.shared_table
-        if decision is not None and decision.fmt == "rgcsr_dtans":
-            from repro.core.rgcsr_dtans import encode_rgcsr_matrix
-            mat = encode_rgcsr_matrix(pruned,
-                                      group_size=decision.group_size,
-                                      shared_table=shared_table)
+            mat = get_format(decision.fmt).encode(
+                pruned, **decision.knobs_dict())
         else:
             mat = encode_matrix(pruned, lane_width=lane_width,
                                 shared_table=shared_table)

@@ -95,3 +95,26 @@ def banded(n: int, bands: int, dtype=np.float64,
         vals.append(np.full(idx.size, palette[j % palette.size], dtype=dtype))
     return CSR.from_coo(np.concatenate(rows), np.concatenate(cols),
                         np.concatenate(vals), (n, n))
+
+
+def block_sparse(n_block_rows: int, n_block_cols: int,
+                 block: tuple = (4, 4), density: float = 0.05,
+                 rng: np.random.Generator | None = None,
+                 dtype=np.float64) -> CSR:
+    """Block-structured sparsity: a uniform random ``density`` fraction
+    of ``r x c`` tiles is fully dense (random values), the rest empty —
+    the FEM / multi-DOF-mesh / structured-pruning pattern blocked
+    formats exist for (every stored tile is 100% filled, so BCSR pays
+    zero fill-in)."""
+    r, c = block
+    rng = rng or np.random.default_rng(0)
+    mask = rng.random((n_block_rows, n_block_cols)) < density
+    bi, bj = np.nonzero(mask)
+    nb = bi.size
+    dr = np.arange(r, dtype=np.int64)
+    dc = np.arange(c, dtype=np.int64)
+    rows = (bi[:, None] * r + dr[None, :]).repeat(c, axis=1).reshape(-1)
+    cols = np.tile((bj[:, None] * c + dc[None, :]), (1, r)).reshape(-1)
+    vals = rng.standard_normal(nb * r * c).astype(dtype)
+    return CSR.from_coo(rows, cols, vals,
+                        (n_block_rows * r, n_block_cols * c))

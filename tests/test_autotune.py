@@ -10,22 +10,26 @@ import numpy as np
 import pytest
 
 from repro.autotune import (DecisionCache, RGCSR_GROUP_SIZES, V5E,
-                            candidates, choose_dtans_config, clear_memo,
+                            bcsr_dtans_nbytes_estimate, candidates,
+                            choose_dtans_config, clear_memo,
                             dtans_config_name, dtans_nbytes_estimate,
-                            fingerprint, lockstep_elems, model_time,
+                            fingerprint, format_names, get_format,
+                            lockstep_elems, model_time,
                             oracle_best, rgcsr_dtans_nbytes_estimate,
                             rgcsr_nbytes, select, spmv_bytes)
 from repro.autotune.cost_model import (DTANS_LANE_WIDTHS,
                                        DTANS_SHARED_TABLE, coo_nbytes,
                                        csr_nbytes, sell_nbytes)
 from repro.autotune.search import Decision
+from repro.core.bcsr_dtans import encode_bcsr_matrix
 from repro.core.csr_dtans import encode_matrix
 from repro.core.rgcsr_dtans import encode_rgcsr_matrix
+from repro.sparse.bcsr import BCSR, BCSR_BLOCK_SHAPES
 from repro.sparse.formats import COO, CSR, SELL
 from repro.sparse.prune import codebook_quantize, magnitude_prune
 from repro.sparse.random_graphs import (banded, barabasi_albert,
-                                        erdos_renyi, stencil_2d,
-                                        watts_strogatz)
+                                        block_sparse, erdos_renyi,
+                                        stencil_2d, watts_strogatz)
 from repro.sparse.rgcsr import RGCSR
 
 GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "goldens")
@@ -47,7 +51,8 @@ def _powerlaw(m: int = 900, n: int = 900, seed: int = 11) -> CSR:
 
 
 def _mini_suite() -> dict:
-    """The 11-matrix synthetic selection suite (paper-Fig. 9 families)."""
+    """The 12-matrix synthetic selection suite (paper-Fig. 9 families
+    plus the block-structured case BCSR exists for)."""
     rng = np.random.default_rng(7)
     w = (rng.standard_normal((512, 512)) / 22).astype(np.float32)
     nn = codebook_quantize(magnitude_prune(w, 0.85), bits=8)
@@ -68,6 +73,8 @@ def _mini_suite() -> dict:
             np.concatenate([np.ones((1, 300)),
                             np.zeros((59, 300))]).astype(np.float64)),
         "powerlaw": _powerlaw(),
+        "blocked": block_sparse(300, 300, (4, 4), 0.035,
+                                np.random.default_rng(21)),
     }
 
 
@@ -136,12 +143,15 @@ class TestCostModel:
         assert abs(est - act) / act < 0.15
 
     def test_candidates_sorted(self):
+        """Default candidate set: every selectable registry format
+        (bcsr_dtans joins only where its fill-in guard admits it)."""
         fp = fingerprint(_f32(stencil_2d(25)))
         cands = candidates(fp)
         times = [c.modeled_time for c in cands]
         assert times == sorted(times)
-        assert {c.fmt for c in cands} == {"csr", "coo", "sell", "rgcsr",
-                                          "dtans", "rgcsr_dtans"}
+        want = set(format_names(selectable=True)) - {"bcsr_dtans"}
+        got = {c.fmt for c in cands}
+        assert want <= got <= want | {"bcsr_dtans"}
 
     @pytest.mark.parametrize("G", RGCSR_GROUP_SIZES)
     def test_rgcsr_size_exact(self, G):
@@ -160,19 +170,19 @@ class TestCostModel:
         act = encode_rgcsr_matrix(a, group_size=G).nbytes
         assert abs(est - act) / act < 0.15
 
-    def test_off_sweep_group_size_is_estimate_until_refined(self):
-        """Group sizes outside RGCSR_GROUP_SIZES lack fingerprint
-        features: their size must be flagged estimated, and budget
-        refinement must construct the exact bytes."""
+    def test_off_sweep_group_size_exact(self):
+        """Group sizes outside RGCSR_GROUP_SIZES are exact too now: the
+        fingerprint's row-nnz RLE derives any width (the old
+        optimistic-nnz fallback is gone)."""
         a = _f32(erdos_renyi(8000, 10, np.random.default_rng(12)))
         fp = fingerprint(a)
         cand = [c for c in candidates(fp, formats=("rgcsr",),
                                       group_sizes=(64,))
                 if c.fmt == "rgcsr"][0]
         true_b = RGCSR.from_csr(a, 64).nbytes
-        assert not cand.exact_size
-        assert cand.nbytes >= true_b        # conservative fallback
-        dec = select(a, formats=("rgcsr",), group_sizes=(64,), budget=1,
+        assert cand.exact_size
+        assert cand.nbytes == true_b
+        dec = select(a, formats=("rgcsr",), group_sizes=(64,),
                      cache=DecisionCache(path=None))
         assert dec.exact_size and dec.nbytes == true_b
 
@@ -183,6 +193,82 @@ class TestCostModel:
         for c in (4, 32):
             assert lockstep_elems(rnnz, c) == \
                 SELL.from_csr(a, slice_height=c).indices.size
+
+    @pytest.mark.parametrize("width", [1, 3, 5, 7, 23, 48, 100, 1000])
+    def test_lockstep_exact_for_arbitrary_widths(self, width):
+        """`Fingerprint.lockstep` is exact for ANY width — verified
+        against the stored element count of an actually-constructed
+        SELL at that slice height (the former {4,8,16,32,128}-only
+        fast path plus optimistic-nnz fallback is gone)."""
+        a = _f32(_powerlaw(230, 300, seed=3))
+        fp = fingerprint(a)
+        assert fp.lockstep(width) == \
+            SELL.from_csr(a, slice_height=width).indices.size
+        assert fp.group_max_nnz(width) == \
+            int(np.diff(RGCSR.from_csr(a, width).group_ptr).max())
+
+    @pytest.mark.parametrize("bs", BCSR_BLOCK_SHAPES)
+    def test_bcsr_size_exact(self, bs):
+        """The selector's 'exact' BCSR bytes equal the constructed
+        format's own accounting (block-fill histogram feature)."""
+        for a in (_f32(stencil_2d(25)),
+                  _f32(block_sparse(60, 50, (4, 4), 0.1))):
+            fp = fingerprint(a)
+            spec = get_format("bcsr")
+            assert spec.nbytes_exact(fp, block_shape=bs) == \
+                BCSR.from_csr(a, bs).nbytes
+
+    def test_bcsr_dtans_estimate_close(self):
+        """Fingerprint-only BCSR-dtANS size estimate within 15% of the
+        real encode, for every admitted block shape."""
+        a = _f32(block_sparse(80, 80, (4, 4), 0.08,
+                              np.random.default_rng(5)))
+        fp = fingerprint(a)
+        spec = get_format("bcsr_dtans")
+        shapes = [kn["block_shape"] for kn in spec.knob_grid(fp)]
+        assert shapes, "no admitted block shape on a blocked matrix?"
+        for bs in shapes:
+            est = bcsr_dtans_nbytes_estimate(fp, block_shape=bs)
+            act = encode_bcsr_matrix(a, block_shape=bs).nbytes
+            assert abs(est - act) / act < 0.15
+
+    def test_bcsr_dtans_fill_guard(self):
+        """Scattered nonzeros (ER) blow up block fill-in: the knob grid
+        must refuse to offer (and the oracle to encode) those layouts."""
+        a = _f32(erdos_renyi(900, 8, np.random.default_rng(4)))
+        fp = fingerprint(a)
+        assert get_format("bcsr_dtans").knob_grid(fp) == []
+
+    def test_off_sweep_block_shape_exact_and_admitted(self):
+        """Block shapes outside BCSR_BLOCK_SHAPES are exact too (the
+        fingerprint derives any shape's block count lazily), and an
+        explicitly requested off-sweep shape must not be vetoed by
+        bcsr_dtans's fill guard on a genuinely block-structured
+        matrix."""
+        a = _f32(block_sparse(60, 60, (3, 3), 0.08,
+                              np.random.default_rng(9)))
+        fp = fingerprint(a)
+        true_b = BCSR.from_csr(a, (3, 3)).nbytes
+        assert get_format("bcsr").nbytes_exact(
+            fp, block_shape=(3, 3)) == true_b
+        assert get_format("bcsr_dtans").admit(
+            fp, {"block_shape": (3, 3), "shared_table": True})
+        dec = select(a, formats=("bcsr", "bcsr_dtans"),
+                     block_shapes=((3, 3),),
+                     cache=DecisionCache(path=None))
+        assert dec.block_shape == (3, 3) and dec.exact_size
+
+    def test_fully_pruned_formats_raise_diagnosable_error(self):
+        """When `admit` prunes every candidate of the requested formats
+        (only possible since matrix-adaptive knob grids exist), select
+        and the oracle must raise a named error, not IndexError."""
+        from repro.autotune import oracle_best
+        a = _f32(erdos_renyi(900, 8, np.random.default_rng(4)))
+        with pytest.raises(ValueError, match="no admitted candidate"):
+            select(a, formats=("bcsr_dtans",),
+                   cache=DecisionCache(path=None))
+        with pytest.raises(ValueError, match="no admitted candidate"):
+            oracle_best(a, formats=("bcsr_dtans",))
 
 
 class TestCache:
@@ -312,14 +398,15 @@ class TestSelector:
         assert max(regrets) < 0.1, f"max regret {max(regrets):.3f}"
 
     def test_snapshot_decisions_and_zero_regret(self):
-        """Decision snapshot (satellite): `select()` on the 11-matrix
-        suite must (a) match the frozen choices in
+        """Decision snapshot: `select()` on the 12-matrix suite must
+        (a) match the frozen choices in
         tests/goldens/autotune_decisions.json — a cost-model edit that
         flips a selection fails here and forces a deliberate regen
         (REPRO_REGEN_GOLDENS=1) — and (b) keep selector-vs-oracle regret
-        at zero, including the new RGCSR candidates. Also pins the
-        ISSUE's acceptance bar: a skewed-row-length matrix selects an
-        rgcsr format."""
+        at zero with the full registry candidate set (bcsr/bcsr_dtans
+        included). Also pins two acceptance bars: a skewed-row-length
+        matrix selects an rgcsr format, and the block-structured matrix
+        selects a bcsr variant."""
         path = os.path.join(GOLDEN_DIR, "autotune_decisions.json")
         cache = DecisionCache(path=None)
         got: dict = {}
@@ -338,6 +425,7 @@ class TestSelector:
                 got[tag][name] = dec.config_name
         skewed = {"powerlaw", "single_row"}
         assert any(got["warm"][s].startswith("rgcsr") for s in skewed)
+        assert got["warm"]["blocked"].startswith("bcsr")
         if os.environ.get("REPRO_REGEN_GOLDENS"):
             os.makedirs(GOLDEN_DIR, exist_ok=True)
             with open(path, "w") as f:
@@ -359,12 +447,16 @@ class TestSelector:
     def test_choose_dtans_config(self):
         a = _f32(banded(800, 6))
         dec = choose_dtans_config(a, cache=DecisionCache(path=None))
-        assert dec.fmt in ("dtans", "rgcsr_dtans")
+        assert dec.fmt in format_names(selectable=True, decodes=True)
         # lane_width is always the interleave width the matrix was
-        # encoded with (== group_size for the rgcsr_dtans family).
-        assert dec.lane_width in DTANS_LANE_WIDTHS + RGCSR_GROUP_SIZES
+        # encoded with (== group size / block height for the aligned
+        # families) — what the registry's spec derives from the knobs.
+        spec = get_format(dec.fmt)
+        assert dec.lane_width == spec.interleave_width(dec.knobs_dict())
         if dec.fmt == "rgcsr_dtans":
             assert dec.lane_width == dec.group_size
+        if dec.fmt == "bcsr_dtans":
+            assert dec.lane_width == dec.block_shape[0]
 
     def test_memo_hit_is_fast_and_identical(self):
         import time

@@ -1,0 +1,183 @@
+"""BCSR format family: construction, byte accounting, the Pallas
+kernel, block-filled entropy coding (BCSR-dtANS), and property-based
+round-trips — the blocked mirror of tests/test_rgcsr.py."""
+
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core.bcsr_dtans import BCSRdtANS, encode_bcsr_matrix
+from repro.core.csr_dtans import decode_matrix, spmv_gold
+from repro.kernels import ops
+from repro.kernels.bcsr_spmv import bcsr_spmv_ref, pack_bcsr
+from repro.sparse.bcsr import (BCSR, BCSR_BLOCK_SHAPES, bcsr_nbytes_exact,
+                               block_fill_csr, count_nonempty_blocks)
+from repro.sparse.formats import CSR
+from repro.sparse.random_graphs import (banded, block_sparse, erdos_renyi,
+                                        stencil_2d)
+
+
+def _assert_same_csr(a: CSR, b: CSR):
+    assert a.shape == b.shape
+    assert np.array_equal(a.indptr, b.indptr)
+    assert np.array_equal(a.indices, b.indices)
+    assert np.array_equal(a.values, b.values)  # bit-exact (lossless)
+
+
+def _random_csr(rng, m, n, density, dtype=np.float64):
+    d = rng.integers(-3, 4, size=(m, n)).astype(dtype)
+    d[rng.random((m, n)) >= density] = 0
+    return CSR.from_dense(d)
+
+
+class TestBCSRFormat:
+    @pytest.mark.parametrize("bs", BCSR_BLOCK_SHAPES)
+    def test_roundtrip(self, bs):
+        a = erdos_renyi(100, 6, np.random.default_rng(1))
+        b = BCSR.from_csr(a, bs)
+        _assert_same_csr(a, b.to_csr())
+        np.testing.assert_array_equal(b.to_dense(), a.to_dense())
+
+    def test_roundtrip_empty_and_awkward(self):
+        """Edge blocks (shape not a multiple of r/c), empty matrices,
+        single dense rows."""
+        for d in (np.zeros((8, 9)),
+                  np.diag(np.r_[np.zeros(5), np.arange(1.0, 7.0)]),
+                  np.ones((3, 41))):
+            a = CSR.from_dense(d)
+            for bs in ((1, 1), (2, 2), (4, 4), (4, 2), (8, 8)):
+                b = BCSR.from_csr(a, bs)
+                _assert_same_csr(a, b.to_csr())
+                np.testing.assert_array_equal(b.to_dense(), d)
+
+    @pytest.mark.parametrize("bs", BCSR_BLOCK_SHAPES)
+    def test_nbytes_matches_block_count_formula(self, bs):
+        a = stencil_2d(15)
+        b = BCSR.from_csr(a, bs)
+        nb = count_nonempty_blocks(a.indptr, a.indices, a.shape, bs)
+        assert b.n_blocks == nb
+        assert b.nbytes == bcsr_nbytes_exact(nb, a.shape[0], bs, 8)
+
+    def test_fully_blocked_matrix_beats_csr_bytes(self):
+        """On a perfectly block-structured matrix the per-element index
+        cost drops to 4 / (r*c) bytes — the format's reason to exist."""
+        a = block_sparse(50, 50, (4, 4), 0.1, np.random.default_rng(2))
+        b = BCSR.from_csr(a, (4, 4))
+        assert b.nnz_stored == a.nnz              # zero fill-in
+        assert b.nbytes < a.nbytes
+
+    def test_spmv_reference(self):
+        rng = np.random.default_rng(3)
+        a = _random_csr(rng, 45, 37, 0.2)
+        b = BCSR.from_csr(a, (4, 4))
+        x = rng.standard_normal(37)
+        y0 = rng.standard_normal(45)
+        np.testing.assert_allclose(b.spmv(x, y0), a.to_dense() @ x + y0,
+                                   rtol=1e-12)
+
+    def test_block_fill_csr_preserves_dense(self):
+        rng = np.random.default_rng(4)
+        a = _random_csr(rng, 30, 22, 0.15)
+        for bs in ((2, 2), (4, 4), (3, 5)):
+            f = block_fill_csr(a, bs)
+            np.testing.assert_array_equal(f.to_dense(), a.to_dense())
+            assert f.nnz >= a.nnz
+            # filled rows cover whole blocks: every stored run is c wide
+            # except where the matrix boundary cuts a block
+            nb = count_nonempty_blocks(a.indptr, a.indices, a.shape, bs)
+            assert f.nnz <= nb * bs[0] * bs[1]
+
+
+class TestBCSRKernel:
+    @pytest.mark.parametrize("bs", [(2, 2), (4, 4), (8, 8)])
+    @pytest.mark.parametrize("dtype", [np.float64, np.float32])
+    def test_kernel_vs_ref_and_dense(self, bs, dtype):
+        rng = np.random.default_rng(5)
+        a = _random_csr(rng, 66, 43, 0.15, dtype)
+        pb = pack_bcsr(BCSR.from_csr(a, bs))
+        x = rng.standard_normal(43).astype(dtype)
+        y_k = np.asarray(ops.bcsr_spmv(pb, x))
+        y_r = np.asarray(bcsr_spmv_ref(pb.block_cols, pb.values, x)
+                         ).reshape(-1)[:66]
+        rtol = 1e-12 if dtype == np.float64 else 1e-5
+        np.testing.assert_allclose(y_k, y_r, rtol=rtol)
+        np.testing.assert_allclose(y_k, a.to_dense() @ x, rtol=rtol,
+                                   atol=1e-5 if dtype == np.float32 else 0)
+
+    def test_accumulate_y(self):
+        rng = np.random.default_rng(6)
+        a = _random_csr(rng, 33, 29, 0.2, np.float32)
+        pb = pack_bcsr(BCSR.from_csr(a, (4, 4)))
+        x = rng.standard_normal(29).astype(np.float32)
+        y0 = rng.standard_normal(33).astype(np.float32)
+        got = np.asarray(ops.bcsr_spmv(pb, x, y0))
+        np.testing.assert_allclose(got, a.to_dense() @ x + y0, rtol=1e-5,
+                                   atol=1e-5)
+
+
+class TestBCSRdtANS:
+    @pytest.mark.parametrize("bs", BCSR_BLOCK_SHAPES)
+    def test_roundtrip_is_block_filled(self, bs):
+        """decode(encode_bcsr(a)) == block_fill(a) bit-exactly, and the
+        filled matrix's dense form equals the original's."""
+        a = erdos_renyi(60, 5, np.random.default_rng(7))
+        mat = encode_bcsr_matrix(a, block_shape=bs)
+        assert isinstance(mat, BCSRdtANS)
+        dec = decode_matrix(mat)
+        _assert_same_csr(block_fill_csr(a, bs), dec)
+        np.testing.assert_array_equal(dec.to_dense(), a.to_dense())
+
+    def test_slices_align_with_block_rows(self):
+        """The defining property: one decode slice per block row."""
+        a = banded(64, 4)
+        mat = encode_bcsr_matrix(a, block_shape=(4, 4))
+        assert mat.lane_width == 4
+        assert mat.n_block_rows == 16
+        assert mat.slice_offsets.size == mat.n_block_rows + 1
+
+    def test_nbytes_accounting(self):
+        """Block-count metadata replaces per-row lengths: base CSR-dtANS
+        accounting minus 4 B/row plus 2 B/block-row."""
+        a = banded(640, 5)
+        mat = encode_bcsr_matrix(a, block_shape=(4, 4))
+        from repro.core.csr_dtans import CSRdtANS
+        base = CSRdtANS.nbytes.fget(mat)
+        assert mat.nbytes == base - 640 * 4 + mat.n_block_rows * 2
+
+    def test_spmv_gold_and_kernel(self):
+        rng = np.random.default_rng(8)
+        a = _random_csr(rng, 52, 40, 0.15)
+        mat = encode_bcsr_matrix(a, block_shape=(2, 2))
+        x = rng.standard_normal(40)
+        want = a.to_dense() @ x
+        np.testing.assert_allclose(spmv_gold(mat, x), want, rtol=1e-12)
+        np.testing.assert_allclose(np.asarray(ops.spmv(mat, x)), want,
+                                   rtol=1e-9)
+
+
+class TestPropertyRoundtrips:
+    """Property-based bit-exactness (skips when hypothesis is absent;
+    the CI no-hypothesis leg exercises the shim path)."""
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2 ** 31))
+    def test_bcsr_random(self, seed):
+        rng = np.random.default_rng(seed)
+        m, n = int(rng.integers(1, 70)), int(rng.integers(1, 70))
+        a = _random_csr(rng, m, n, float(rng.uniform(0.01, 0.4)))
+        bs = (int(rng.integers(1, 9)), int(rng.integers(1, 9)))
+        b = BCSR.from_csr(a, bs)
+        _assert_same_csr(a, b.to_csr())
+        x = rng.standard_normal(n)
+        np.testing.assert_allclose(b.spmv(x), a.to_dense() @ x,
+                                   rtol=1e-10, atol=1e-10)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2 ** 31))
+    def test_bcsr_dtans_random(self, seed):
+        rng = np.random.default_rng(seed)
+        m, n = int(rng.integers(1, 50)), int(rng.integers(1, 50))
+        a = _random_csr(rng, m, n, float(rng.uniform(0.01, 0.3)))
+        bs = (int(rng.integers(1, 6)), int(rng.integers(1, 6)))
+        mat = encode_bcsr_matrix(a, block_shape=bs)
+        _assert_same_csr(block_fill_csr(a, bs), decode_matrix(mat))

@@ -19,9 +19,11 @@ import os
 import numpy as np
 import pytest
 
+from repro.core.bcsr_dtans import encode_bcsr_matrix
 from repro.core.csr_dtans import decode_matrix, encode_matrix
 from repro.core.params import TOY
 from repro.core.rgcsr_dtans import encode_rgcsr_matrix
+from repro.sparse.bcsr import block_fill_csr
 from repro.sparse.formats import CSR
 from repro.sparse.random_graphs import stencil_2d
 
@@ -60,12 +62,18 @@ CASES = {
                                 params=TOY)),
     "rgcsr_stencil6_f64_G8": (lambda: stencil_2d(6),
                               dict(group_size=8, shared_table=True)),
+    "bcsr_stencil6_f64_B2x2": (lambda: stencil_2d(6),
+                               dict(block_shape=(2, 2),
+                                    shared_table=True)),
 }
 
 
 def _encode(name):
     factory, kw = CASES[name]
     a = factory()
+    if "block_shape" in kw:
+        return block_fill_csr(a, kw["block_shape"]), \
+            encode_bcsr_matrix(a, **kw)
     if "group_size" in kw:
         return a, encode_rgcsr_matrix(a, **kw)
     return a, encode_matrix(a, **kw)
@@ -108,6 +116,9 @@ def _payload(mat) -> dict:
     }
     if hasattr(mat, "group_size"):
         out["group_size"] = int(mat.group_size)
+    if hasattr(mat, "block_shape"):
+        out["block_shape"] = list(mat.block_shape)
+        out["n_blocks"] = int(mat.n_blocks)
     return out
 
 
@@ -141,3 +152,4 @@ def test_goldens_cover_escape_and_table_modes():
     assert any(len(m.tables) == 1 for m in encs.values())
     assert any(len(m.tables) == 2 for m in encs.values())
     assert any(hasattr(m, "group_size") for m in encs.values())
+    assert any(hasattr(m, "block_shape") for m in encs.values())

@@ -45,9 +45,12 @@ class TestHarness:
         ("coo", {}),
         ("dense", {}),
         ("sell", {}),
+        ("sell", {"slice_height": 16}),
         ("rgcsr", {"group_size": 8}),
         ("dtans", {"lane_width": 32}),
         ("rgcsr_dtans", {"group_size": 8}),
+        ("bcsr", {"block_shape": (4, 4)}),
+        ("bcsr_dtans", {"block_shape": (2, 2)}),
     ])
     def test_runner_output_matches_dense(self, fmt, kw):
         """Every registered runner computes y = A x — a timing harness
@@ -73,14 +76,25 @@ class TestHarness:
 
     def test_parse_config_name_roundtrip(self):
         assert parse_config_name("csr") == {"fmt": "csr"}
+        assert parse_config_name("sell") == {"fmt": "sell"}
+        assert parse_config_name("dense") == {"fmt": "dense"}
         assert parse_config_name(dtans_config_name(32, False)) == {
             "fmt": "dtans", "lane_width": 32, "shared_table": False}
         assert parse_config_name(rgcsr_config_name(8)) == {
             "fmt": "rgcsr", "group_size": 8}
         assert parse_config_name(rgcsr_dtans_config_name(16, True)) == {
             "fmt": "rgcsr_dtans", "group_size": 16, "shared_table": True}
+        assert parse_config_name("bcsr[B=4x4]") == {
+            "fmt": "bcsr", "block_shape": (4, 4)}
+        assert parse_config_name("bcsr_dtans[B=2x2,shared]") == {
+            "fmt": "bcsr_dtans", "block_shape": (2, 2),
+            "shared_table": True}
+        assert parse_config_name("sell[C=16]") == {
+            "fmt": "sell", "slice_height": 16}
         with pytest.raises(ValueError):
             parse_config_name("alphasparse")
+        with pytest.raises(ValueError):
+            parse_config_name("sell[G=8]")     # knob of another format
 
     def test_measure_named(self):
         t = measure_named(_small(), "sell", warmup=0, repeats=1)
@@ -168,6 +182,22 @@ class TestCalibration:
         d = res.to_dict()
         assert set(d) == {"model", "err_before", "err_after", "points"}
         assert all(np.isfinite(p.modeled_after) for p in res.points)
+
+    def test_calibration_work_matches_packed_slice_height(self):
+        """Bugfix regression: the calibration design row must charge the
+        lock-step work of the slice height the SELL candidate was
+        actually packed with (from its knobs via the registry), not a
+        hard-coded module constant."""
+        from repro.autotune import fingerprint
+        a = self._mats()["er"]
+        fp = fingerprint(a)
+        for cfg, width in (("sell", 32), ("sell[C=16]", 16),
+                           ("sell[C=8]", 8)):
+            res = calibrate({"er": a}, configs=(cfg,), warmup=0,
+                            repeats=1)
+            (p,) = res.points
+            assert p.config_name == cfg
+            assert p.work_elems == fp.lockstep(width)
 
     def test_calibrated_model_drives_select(self):
         res = calibrate(self._mats(), warmup=0, repeats=1)

@@ -3,10 +3,12 @@ dense ``A @ x`` on one shared adversarial corpus.
 
 Two axes, fully parameterized:
 
-* ``SPMV_PATHS`` — name -> callable(a: CSR, x) -> y. EVERY SpMV
-  implementation (numpy references, the gold decode path, the pure-jnp
-  oracles, each Pallas kernel) registers here once; a future format
-  plugs into the whole corpus by adding ONE entry.
+* ``SPMV_PATHS`` — name -> callable(a: CSR, x) -> y. The hand-written
+  reference paths (numpy references, the gold decode path, the pure-jnp
+  oracles) register here once, and `registry_spmv_paths` auto-discovers
+  one kernel path per format in `repro.sparse.registry` — a format
+  registered through the registry joins the whole corpus with ZERO
+  edits to this file (asserted by tests/test_registry.py's toy spec).
 * ``CORPUS`` — name -> dense matrix builder covering the adversarial
   structure zoo: empty matrix, empty rows, one dense row among empties,
   power-law row lengths, all-equal values, plus a regular baseline.
@@ -15,17 +17,23 @@ Each (path, case, dtype) triple asserts against the dense product to
 1e-5 (float32) / 1e-12 (float64) — the ISSUE's acceptance bar.
 """
 
+import functools
+
 import numpy as np
 import pytest
 
+from repro.core.bcsr_dtans import encode_bcsr_matrix
 from repro.core.csr_dtans import encode_matrix, spmv_gold
 from repro.core.rgcsr_dtans import encode_rgcsr_matrix
 from repro.kernels import ops
+from repro.kernels.bcsr_spmv import bcsr_spmv_ref, pack_bcsr
 from repro.kernels.pack import pack_matrix
 from repro.kernels.ref import spmv_ref
 from repro.kernels.rgcsr_spmv import pack_rgcsr, rgcsr_spmv_ref
 from repro.kernels.sell_spmv import pack_sell, sell_spmv_ref
+from repro.sparse.bcsr import BCSR
 from repro.sparse.formats import CSR
+from repro.sparse.registry import iter_formats
 from repro.sparse.rgcsr import RGCSR
 
 # --------------------------------------------------------------------------
@@ -88,9 +96,42 @@ def _rgcsr_dtans_kernel(a: CSR, x):
     return np.asarray(ops.spmv(encode_rgcsr_matrix(a, group_size=8), x))
 
 
+def _bcsr_numpy(a: CSR, x):
+    return BCSR.from_csr(a, (4, 4)).spmv(np.asarray(x,
+                                                    dtype=a.values.dtype))
+
+
+def _bcsr_oracle(a: CSR, x):
+    pb = pack_bcsr(BCSR.from_csr(a, (2, 2)))
+    return np.asarray(bcsr_spmv_ref(pb.block_cols, pb.values, x)
+                      ).reshape(-1)[:a.shape[0]]
+
+
+def _bcsr_dtans_gold(a: CSR, x):
+    return spmv_gold(encode_bcsr_matrix(a, block_shape=(2, 2)), x)
+
+
+def _registry_path(spec, a: CSR, x):
+    return np.asarray(spec.spmv(a, x, **spec.conformance_knobs)
+                      ).reshape(-1)[:a.shape[0]]
+
+
+def registry_spmv_paths() -> dict:
+    """One kernel path per registered format, auto-discovered — the
+    registry analogue of the hand-written entries below. Evaluated at
+    call time so a format registered mid-session (tests) shows up."""
+    return {f"registry:{spec.name}": functools.partial(_registry_path,
+                                                       spec)
+            for spec in iter_formats()}
+
+
+#: Hand-written reference paths; the registry kernel paths are added at
+#: collection via `registry_spmv_paths`.
 SPMV_PATHS = {
     "csr_ref": _csr_ref,
     "rgcsr_numpy": _rgcsr_numpy,
+    "bcsr_numpy": _bcsr_numpy,
+    "bcsr_oracle": _bcsr_oracle,
     "sell_oracle": _sell_oracle,
     "sell_kernel": _sell_kernel,
     "rgcsr_oracle": _rgcsr_ref,
@@ -100,6 +141,8 @@ SPMV_PATHS = {
     "dtans_kernel": _dtans_kernel,
     "rgcsr_dtans_gold": _rgcsr_dtans_gold,
     "rgcsr_dtans_kernel": _rgcsr_dtans_kernel,
+    "bcsr_dtans_gold": _bcsr_dtans_gold,
+    **registry_spmv_paths(),
 }
 
 # --------------------------------------------------------------------------
@@ -178,6 +221,8 @@ OPS_ACCUMULATE = {
         pack_sell(a, lane_width=16), x, y),
     "ops.rgcsr_spmv": lambda a, x, y: ops.rgcsr_spmv(
         pack_rgcsr(RGCSR.from_csr(a, 8)), x, y),
+    "ops.bcsr_spmv": lambda a, x, y: ops.bcsr_spmv(
+        pack_bcsr(BCSR.from_csr(a, (4, 4))), x, y),
 }
 
 
