@@ -1,0 +1,89 @@
+"""Batched-selection benchmark: selector-vs-oracle regret as the
+right-hand-side batch grows.
+
+Production decode traffic arrives in batches: one entropy decode of the
+matrix amortizes over B right-hand sides, which changes the modeled
+trade every format makes — matrix bytes and decode work are paid once
+per SpMM pass, x/y bytes and contraction work once per RHS (the SMASH
+co-design point: the winning compressed layout depends on the access
+pattern that consumes it). This section sweeps ``select(batch=B)``
+against the exhaustive exact-size oracle at the same B and reports
+
+  * per (matrix, B): the selector's pick, the oracle's pick, and the
+    modeled regret (both sides priced by the same `candidate_time`, so
+    regret 0 means genuine agreement at that batch size);
+  * per matrix: whether the winning config *flips* across the sweep —
+    the whole reason the batch knob exists (e.g. low-padding row groups
+    overtake SELL once contraction work dominates);
+  * summary rows: distinct batch sizes recorded (CI asserts >= 2),
+    flip count, and mean/max regret per B.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.suite import cached_suite
+# The fig9 section's encode memo: `--only fig9,batch` (the CI smoke
+# command) runs both sections in one process, and the oracle's
+# constructed sizes are B-independent — a private cache here would
+# re-encode every candidate, doubling the most expensive part of the
+# smoke run.
+from benchmarks.bench_format_selection import _ENC
+from repro.autotune import DecisionCache, clear_memo, select
+from repro.autotune.oracle import oracle_best
+from repro.sparse.formats import CSR
+
+#: Right-hand-side counts swept: the single-vector regime, a typical
+#: serving pool, a prefill-sized burst, and the large-batch regime
+#: where per-RHS contraction work dominates (the suite's stencil/BA
+#: matrices flip SELL -> RGCSR there: padding-light row groups win
+#: once the padded lock-step slots are paid B times per pass).
+BATCH_SIZES = (1, 8, 32, 128)
+
+
+def run(small: bool = False, batches: tuple = BATCH_SIZES):
+    rows = []
+    flips = 0
+    total = 0
+    regrets = {B: [] for B in batches}
+    cache = DecisionCache(path=None)   # memory-only: honest measurement
+    clear_memo()
+
+    for name, a64 in cached_suite(small=small).items():
+        a = CSR(a64.indptr, a64.indices,
+                a64.values.astype(np.float32), a64.shape)
+        enc = _ENC.setdefault(name, {})
+        picks = {}
+        for B in batches:
+            dec = select(a, warm=True, batch=B, cache=cache)
+            o_name, o_time, times = oracle_best(a, warm=True, batch=B,
+                                                encode_cache=enc)
+            regret = times[dec.config_name] / o_time - 1.0
+            regrets[B].append(regret)
+            picks[B] = dec.config_name
+            rows.append((f"fig9batch/{name}@B{B}", 0.0,
+                         f"pick={dec.config_name};oracle={o_name};"
+                         f"regret={regret:.4f}"))
+        flipped = len(set(picks.values())) > 1
+        flips += flipped
+        total += 1
+        rows.append((f"fig9batch/{name}/sweep", 0.0,
+                     "flips=" + ("yes" if flipped else "no") + ";" +
+                     ";".join(f"B{B}={picks[B]}" for B in batches)))
+
+    rows.append(("fig9batch/batch_sizes", 0.0,
+                 f"count={len(batches)};" +
+                 "sizes=" + ",".join(str(B) for B in batches)))
+    rows.append(("fig9batch/format_flips", 0.0, f"{flips}/{total}"))
+    for B in batches:
+        rows.append((f"fig9batch/mean_regret@B{B}", 0.0,
+                     f"{float(np.mean(regrets[B])):.4f}"))
+        rows.append((f"fig9batch/max_regret@B{B}", 0.0,
+                     f"{float(np.max(regrets[B])):.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

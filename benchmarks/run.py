@@ -6,10 +6,17 @@ Prints ``name,us_per_call,derived`` CSV.
   fig7/8  — modeled SpMVM speedup, warm (Table II) & cold (Table III)
   fig9    — vs oracle format selector (AlphaSparse stand-in), including
             measured-refinement regret (wall-clock timed kernels)
+  batch   — batched selection: selector-vs-oracle regret with B right-
+            hand sides per pass (B in {1, 8, 32, 128}; the winning
+            format flips once per-RHS contraction work overtakes the
+            amortized per-pass costs)
   calib   — MachineModel calibration: fit cost-model constants to
             measured kernel times; ``--profile-json`` persists the
             fitted machine profile (CI uploads it as an artifact)
   roofline— summary of the dry-run roofline table when present
+
+``--only`` accepts a comma-separated list (``--only fig9,batch``) so
+one smoke JSON can carry several sections.
 """
 
 from __future__ import annotations
@@ -23,7 +30,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--small", action="store_true",
                     help="trimmed sizes (CI)")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="run only these sections (comma-separated, "
+                         "e.g. 'fig9,batch')")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the rows as a JSON list of "
                          "{name, us_per_call, derived} objects (CI "
@@ -45,9 +54,9 @@ def main() -> None:
                          "exhaustive oracle encodes every candidate)")
     args, _ = ap.parse_known_args()
 
-    from benchmarks import (bench_calibration, bench_compression,
-                            bench_delta_entropy, bench_format_selection,
-                            bench_spmv)
+    from benchmarks import (bench_batch_selection, bench_calibration,
+                            bench_compression, bench_delta_entropy,
+                            bench_format_selection, bench_spmv)
 
     print("name,us_per_call,derived")
     sections = {
@@ -59,12 +68,14 @@ def main() -> None:
         "fig9": lambda: bench_format_selection.run(
             small=args.small, measure=not args.no_measure,
             mtx_dir=args.mtx_dir, max_nnz=args.max_nnz),
+        "batch": lambda: bench_batch_selection.run(small=args.small),
         "calib": lambda: bench_calibration.run(
             small=args.small, profile_json=args.profile_json),
     }
+    only = set(args.only.split(",")) if args.only else None
     collected = []
     for name, fn in sections.items():
-        if args.only and args.only != name:
+        if only is not None and name not in only:
             continue
         for row in fn():
             collected.append(row)

@@ -27,7 +27,8 @@ from repro.autotune.cost_model import (DTANS_LANE_WIDTHS, V5E, Candidate,
                                        rgcsr_dtans_config_name,
                                        rgcsr_dtans_nbytes_estimate,
                                        rgcsr_nbytes, sell_nbytes,
-                                       spmv_bytes, spmv_time, work_time)
+                                       spmm_bytes, spmv_bytes, spmv_time,
+                                       work_time)
 from repro.sparse.registry import (CostTerms, FormatSpec, format_names,
                                    get_format, iter_formats,
                                    parse_config, register, unregister)
@@ -68,6 +69,6 @@ __all__ = [
     "rgcsr_dtans_config_name",
     "rgcsr_dtans_nbytes_estimate", "rgcsr_nbytes", "save_profile",
     "select",
-    "sell_nbytes", "spmv_bytes", "spmv_time", "time_kernel",
-    "unregister", "work_time",
+    "sell_nbytes", "spmm_bytes", "spmv_bytes", "spmv_time",
+    "time_kernel", "unregister", "work_time",
 ]

@@ -122,9 +122,18 @@ def bcsr_config_name(block_shape: tuple) -> str:
 V5E = MachineModel()
 
 
+def spmm_bytes(fmt_bytes: int, n: int, m: int, vbytes: int,
+               batch: int = 1) -> int:
+    """Bytes moved by one multi-RHS SpMM pass: the matrix (and for the
+    entropy formats, its one decode) is paid ONCE, while the x and y
+    vectors are paid per right-hand side — the amortization that lets a
+    compressed format win at batch sizes where it loses at B=1."""
+    return fmt_bytes + batch * (n + m) * vbytes
+
+
 def spmv_bytes(fmt_bytes: int, n: int, m: int, vbytes: int) -> int:
     """Bytes moved by one SpMVM: matrix + x + y (paper Section III-A)."""
-    return fmt_bytes + n * vbytes + m * vbytes
+    return spmm_bytes(fmt_bytes, n, m, vbytes, 1)
 
 
 def model_time(bytes_moved: int, nnz: int, *, warm: bool, decode: bool,
@@ -141,10 +150,16 @@ def model_time(bytes_moved: int, nnz: int, *, warm: bool, decode: bool,
     return t
 
 
-def work_time(terms: CostTerms, machine: MachineModel = V5E) -> float:
-    """Seconds of kernel compute for one `FormatSpec.cost_terms` split."""
+def work_time(terms: CostTerms, machine: MachineModel = V5E,
+              batch: int = 1) -> float:
+    """Seconds of kernel compute for one `FormatSpec.cost_terms` split.
+
+    The contraction terms (``lockstep``/``rowseq``) scale with the
+    number of right-hand sides; the ``decode`` term does not — the
+    fused SpMM kernels decode each segment once and contract it against
+    all B columns, so entropy-decode overhead amortizes with batch."""
     ops = ((terms.lockstep + terms.rowseq * machine.row_seq_penalty)
-           * machine.spmv_ops_per_elem
+           * machine.spmv_ops_per_elem * batch
            + terms.decode * machine.decode_ops_per_nnz)
     return ops / machine.vpu_rate
 
@@ -171,10 +186,12 @@ def spmv_time(nbytes: int, work_elems: float, ops_per_elem: float, *,
 
 
 def candidate_time(fp: Fingerprint, fmt: str, nbytes: int, *, warm: bool,
-                   machine: MachineModel = V5E, **knobs) -> float:
+                   machine: MachineModel = V5E, batch: int = 1,
+                   **knobs) -> float:
     """Modeled seconds of one (format, config) from fingerprint
     features: `memory_time` plus the `work_time` of the format's
-    `CostTerms`.
+    `CostTerms` — for a ``batch``-RHS SpMM pass (matrix bytes and
+    decode work once, x/y bytes and contraction work per RHS).
 
     The single formula shared by `candidates`, `search._refine`, the
     exhaustive oracle (`repro.autotune.oracle`) and calibration —
@@ -183,10 +200,10 @@ def candidate_time(fp: Fingerprint, fmt: str, nbytes: int, *, warm: bool,
     set."""
     spec = get_format(fmt)
     terms = spec.cost_terms(fp, **spec.filter_knobs(knobs))
-    return (memory_time(spmv_bytes(nbytes, fp.cols, fp.rows,
-                                   fp.value_bytes),
+    return (memory_time(spmm_bytes(nbytes, fp.cols, fp.rows,
+                                   fp.value_bytes, batch),
                         warm=warm, machine=machine)
-            + work_time(terms, machine))
+            + work_time(terms, machine, batch))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -211,14 +228,15 @@ class Candidate(KnobbedConfigMixin):
 
 def make_candidate(fp: Fingerprint, fmt: str, knobs: dict, nbytes: int,
                    exact: bool, *, warm: bool,
-                   machine: MachineModel = V5E) -> Candidate:
+                   machine: MachineModel = V5E,
+                   batch: int = 1) -> Candidate:
     """Price one (format, knobs, nbytes) point into a `Candidate`."""
     spec = get_format(fmt)
     kn = spec.normalize_knobs(knobs)
     return Candidate(
         fmt=fmt, nbytes=int(nbytes),
         modeled_time=candidate_time(fp, fmt, nbytes, warm=warm,
-                                    machine=machine, **kn),
+                                    machine=machine, batch=batch, **kn),
         exact_size=bool(exact),
         knobs=tuple((k, kn[k]) for k in spec.knob_domains))
 
@@ -375,9 +393,48 @@ def bcsr_dtans_nbytes_estimate(fp: Fingerprint, *,
     return int(b)
 
 
+def merge_knob_overrides(knob_overrides: dict | None = None, *,
+                         lane_widths: tuple | None = None,
+                         group_sizes: tuple | None = None,
+                         block_shapes: tuple | None = None) -> dict:
+    """One canonical knob-override dict from the generic
+    ``knob_overrides`` parameter plus the legacy named sugar
+    (``lane_widths`` / ``group_sizes`` / ``block_shapes``, kept for
+    compatibility; the named form wins when both spell the same knob).
+    Shared by `candidates`, `search.select` and `oracle.oracle_times`
+    so the three can never disagree about what a sweep override means.
+    """
+    out = {k: tuple(v) for k, v in (knob_overrides or {}).items()
+           if v is not None}
+    if lane_widths is not None:
+        out["lane_width"] = tuple(lane_widths)
+    if group_sizes is not None:
+        out["group_size"] = tuple(group_sizes)
+    if block_shapes is not None:
+        out["block_shape"] = tuple(tuple(b) for b in block_shapes)
+    return out
+
+
+def render_knob_overrides(overrides: dict) -> str:
+    """Deterministic cache-key spelling of one override dict
+    (``"def"`` when empty — no overrides, the specs' own domains)."""
+    if not overrides:
+        return "def"
+
+    def one(v) -> str:
+        if isinstance(v, (tuple, list)):
+            return "x".join(str(x) for x in v)
+        return str(v)
+
+    return ";".join(f"{k}=" + ",".join(one(v) for v in vs)
+                    for k, vs in sorted(overrides.items()))
+
+
 def candidates(fp: Fingerprint, *, machine: MachineModel = V5E,
                warm: bool = True, params: DtansParams = PAPER,
                formats: tuple = None,
+               batch: int = 1,
+               knob_overrides: dict | None = None,
                lane_widths: tuple = None,
                group_sizes: tuple = None,
                block_shapes: tuple = None) -> list[Candidate]:
@@ -385,21 +442,26 @@ def candidates(fp: Fingerprint, *, machine: MachineModel = V5E,
 
     Iterates the `repro.sparse.registry` — a newly registered
     selectable format joins the sweep with no edit here. ``formats``
-    defaults to every selectable registered family; the remaining
-    keywords override individual knob domains.
+    defaults to every selectable registered family; ``batch`` prices a
+    multi-RHS SpMM pass (decode and matrix bytes amortize over B);
+    ``knob_overrides`` narrows/extends any knob domain by name (the
+    named keywords remain as sugar for the three built-in knobs).
     """
     if formats is None:
         # Dynamic, not the module constant: formats registered after
         # import (e.g. in tests) must join the sweep.
         formats = format_names(selectable=True)
-    overrides = {"lane_width": lane_widths, "group_size": group_sizes,
-                 "block_shape": block_shapes}
+    overrides = merge_knob_overrides(knob_overrides,
+                                     lane_widths=lane_widths,
+                                     group_sizes=group_sizes,
+                                     block_shapes=block_shapes)
     out: list[Candidate] = []
     for fmt in formats:
         spec = get_format(fmt)
         for knobs, nbytes, exact in spec.candidates(fp, overrides,
                                                     params=params):
             out.append(make_candidate(fp, fmt, knobs, nbytes, exact,
-                                      warm=warm, machine=machine))
+                                      warm=warm, machine=machine,
+                                      batch=batch))
     out.sort(key=lambda cand: cand.modeled_time)
     return out

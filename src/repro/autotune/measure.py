@@ -41,7 +41,7 @@ import numpy as np
 
 from repro.autotune.cache import atomic_merge_json, default_cache_path
 from repro.autotune.cost_model import (V5E, Candidate, MachineModel,
-                                       candidate_time, spmv_bytes)
+                                       candidate_time, spmm_bytes)
 from repro.autotune.fingerprint import fingerprint
 from repro.core.params import PAPER, DtansParams
 from repro.sparse.registry import get_format, parse_config
@@ -82,13 +82,15 @@ def time_kernel(fn, *, warmup: int = DEFAULT_WARMUP,
     return float(np.median(samples))
 
 
-def _default_x(a) -> np.ndarray:
+def _default_x(a, batch: int = 1) -> np.ndarray:
     rng = np.random.default_rng(0xA0)
-    return rng.standard_normal(a.shape[1]).astype(a.values.dtype)
+    shape = (a.shape[1],) if batch == 1 else (a.shape[1], batch)
+    return rng.standard_normal(shape).astype(a.values.dtype)
 
 
 def spmv_runner(a, fmt: str, *, params: DtansParams = PAPER,
-                x: np.ndarray | None = None, interpret: bool = True,
+                x: np.ndarray | None = None, batch: int = 1,
+                interpret: bool = True,
                 artifacts: dict | None = None, **knobs):
     """Zero-arg callable running one ``y = A x`` through the registered
     kernel path of (format, config); feed it to `time_kernel`.
@@ -106,27 +108,45 @@ def spmv_runner(a, fmt: str, *, params: DtansParams = PAPER,
     plain kernels, the XLA scatter-add SpMV for the kernel-less
     row-sequential formats, and a jit'd dense ``A @ x`` — calibration's
     bandwidth anchor).
+
+    ``batch > 1`` drives the format's multi-RHS path instead
+    (`FormatSpec.spmm_runner` — the fused SpMM kernels where the format
+    has one, a per-column fallback otherwise); ``x`` must then be
+    (n, batch) when given.
     """
     try:
         spec = get_format(fmt)
     except ValueError as e:
         raise ValueError(f"no registered SpMV runner for format "
                          f"{fmt!r}") from e
-    x = _default_x(a) if x is None else x
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1; got {batch}")
+    x = _default_x(a, batch) if x is None else x
+    if batch > 1:
+        # Validate the rhs BEFORE pack: a shape mistake must not cost
+        # a full entropy encode first.
+        x = np.asarray(x)
+        if x.ndim != 2 or x.shape[1] != batch:
+            raise ValueError(f"batch={batch} needs x of shape "
+                             f"({a.shape[1]}, {batch}); got {x.shape}")
     packed = spec.pack(a, params=params, artifacts=artifacts,
                        **spec.filter_knobs(knobs))
-    return spec.runner(packed, x, interpret=interpret)
+    if batch == 1:
+        return spec.runner(packed, x, interpret=interpret)
+    return spec.spmm_runner(packed, x, interpret=interpret)
 
 
 def measure_config(a, fmt: str, *, params: DtansParams = PAPER,
-                   x: np.ndarray | None = None, interpret: bool = True,
+                   x: np.ndarray | None = None, batch: int = 1,
+                   interpret: bool = True,
                    warmup: int = DEFAULT_WARMUP,
                    repeats: int = DEFAULT_REPEATS,
                    artifacts: dict | None = None, **knobs) -> float:
-    """Measured median seconds of one (format, config) SpMV on ``a``
-    (``**knobs`` as in `spmv_runner`)."""
-    fn = spmv_runner(a, fmt, params=params, x=x, interpret=interpret,
-                     artifacts=artifacts, **knobs)
+    """Measured median seconds of one (format, config) SpMV — or, with
+    ``batch > 1``, one multi-RHS SpMM pass — on ``a`` (``**knobs`` as
+    in `spmv_runner`)."""
+    fn = spmv_runner(a, fmt, params=params, x=x, batch=batch,
+                     interpret=interpret, artifacts=artifacts, **knobs)
     return time_kernel(fn, warmup=warmup, repeats=repeats)
 
 
@@ -142,26 +162,29 @@ def parse_config_name(name: str) -> dict:
 
 
 def measure_named(a, config_name: str, *, params: DtansParams = PAPER,
-                  x: np.ndarray | None = None, interpret: bool = True,
+                  x: np.ndarray | None = None, batch: int = 1,
+                  interpret: bool = True,
                   warmup: int = DEFAULT_WARMUP,
                   repeats: int = DEFAULT_REPEATS,
                   artifacts: dict | None = None) -> float:
     """`measure_config` addressed by canonical config name — how the
     benchmarks time the exhaustive oracle's pick."""
     return measure_config(a, **parse_config_name(config_name),
-                          params=params, x=x, interpret=interpret,
+                          params=params, x=x, batch=batch,
+                          interpret=interpret,
                           warmup=warmup, repeats=repeats,
                           artifacts=artifacts)
 
 
 def measure_candidate(a, cand: Candidate, *, params: DtansParams = PAPER,
-                      x: np.ndarray | None = None, interpret: bool = True,
+                      x: np.ndarray | None = None, batch: int = 1,
+                      interpret: bool = True,
                       warmup: int = DEFAULT_WARMUP,
                       repeats: int = DEFAULT_REPEATS,
                       artifacts: dict | None = None) -> float:
     """`measure_config` keyed off a cost-model `Candidate` (the
     candidate's knobs tuple carries the full configuration)."""
-    return measure_config(a, cand.fmt, params=params, x=x,
+    return measure_config(a, cand.fmt, params=params, x=x, batch=batch,
                           interpret=interpret, warmup=warmup,
                           repeats=repeats, artifacts=artifacts,
                           **cand.knobs_dict())
@@ -174,7 +197,7 @@ def measure_candidate(a, cand: Candidate, *, params: DtansParams = PAPER,
 
 @dataclasses.dataclass(frozen=True)
 class CalibrationPoint:
-    """One (matrix, config) measurement with its model features."""
+    """One (matrix, config, batch) measurement with its model features."""
 
     matrix: str
     config_name: str
@@ -184,6 +207,7 @@ class CalibrationPoint:
     measured: float          # seconds
     modeled_before: float    # seconds under the base (hand-tuned) model
     modeled_after: float = float("nan")   # filled in after the fit
+    batch: int = 1           # right-hand sides of the measured pass
 
 
 @dataclasses.dataclass(frozen=True)
@@ -266,19 +290,29 @@ def _clamped_lstsq(A: np.ndarray, t: np.ndarray,
     return beta
 
 
+#: Batched design rows: each calibration config is measured once per
+#: batch size, so the fit sees rows where contraction work scales with
+#: B while decode work does not — exactly the split the batched cost
+#: model prices. B=1 keeps the classic SpMV rows; B=8 is large enough
+#: to separate the per-RHS terms without slowing CI measurably.
+CALIBRATION_BATCHES = (1, 8)
+
+
 def calibrate(matrices: dict | None = None, *, base: MachineModel = V5E,
               name: str | None = None, warm: bool = True,
               configs: tuple = CALIBRATION_CONFIGS,
+              batches: tuple = CALIBRATION_BATCHES,
               params: DtansParams = PAPER, interpret: bool = True,
               warmup: int = DEFAULT_WARMUP,
               repeats: int = DEFAULT_REPEATS,
               small: bool = True) -> CalibrationResult:
     """Fit MachineModel constants from a measured microbench sweep.
 
-    Each measurement contributes one row of a linear system
+    Each (matrix, config, batch) measurement contributes one row of a
+    linear system
 
         t = miss_bytes/hbm_bw + hit_bytes/cache_bw
-            + (lockstep_work * c_ls + rowseq_work * c_rs
+            + (B * lockstep_work * c_ls + B * rowseq_work * c_rs
                + decode_work * c_dec)
 
     whose five coefficients map back to ``hbm_bw``, ``cache_bw``,
@@ -286,7 +320,10 @@ def calibrate(matrices: dict | None = None, *, base: MachineModel = V5E,
     ``decode_ops_per_nnz`` (``vpu_rate`` and ``cache_bytes`` stay at the
     base model's datasheet values — they are not separately identifiable
     from end-to-end times). Coefficients the data cannot pin down
-    positively fall back to the base model's value.
+    positively fall back to the base model's value. The ``batches``
+    sweep (default ``(1, 8)``) measures every config through both the
+    single-vector and the fused multi-RHS kernel path, giving the fit
+    rows where the contraction terms scale but the decode term does not.
 
     Returns a `CalibrationResult`; ``result.model`` is ready for
     ``select(machine=...)`` and `save_profile`.
@@ -301,32 +338,36 @@ def calibrate(matrices: dict | None = None, *, base: MachineModel = V5E,
         enc: dict = {}
         for cfg_name in configs:
             spec, knobs = parse_config(cfg_name)
-            t_meas = measure_config(
-                a, spec.name, params=params, interpret=interpret,
-                warmup=warmup, repeats=repeats, artifacts=enc, **knobs)
             nbytes = spec.nbytes_constructed(a, params=params,
                                              artifacts=enc, **knobs)
             # The design-matrix row IS the spec's cost-term split — the
             # same knobs the runner packed with (the SELL slice height
             # comes from the config, not a module constant).
             terms = spec.cost_terms(fp, **knobs)
-            moved = spmv_bytes(nbytes, fp.cols, fp.rows, fp.value_bytes)
-            hit = min(moved, base.cache_bytes) if warm else 0.0
-            feats.append([
-                moved - hit,          # 1/hbm_bw
-                hit,                  # 1/cache_bw
-                terms.lockstep,       # c_ls
-                terms.rowseq,         # c_rs
-                terms.decode,         # c_dec
-            ])
-            meas.append(t_meas)
-            t_before = candidate_time(fp, spec.name, nbytes, warm=warm,
-                                      machine=base, **knobs)
-            points.append(CalibrationPoint(
-                matrix=mname, config_name=spec.encode_knobs(knobs),
-                fmt=spec.name, nbytes=int(nbytes),
-                work_elems=int(terms.work_elems), measured=t_meas,
-                modeled_before=t_before))
+            for B in batches:
+                t_meas = measure_config(
+                    a, spec.name, params=params, batch=B,
+                    interpret=interpret, warmup=warmup,
+                    repeats=repeats, artifacts=enc, **knobs)
+                moved = spmm_bytes(nbytes, fp.cols, fp.rows,
+                                   fp.value_bytes, B)
+                hit = min(moved, base.cache_bytes) if warm else 0.0
+                feats.append([
+                    moved - hit,          # 1/hbm_bw
+                    hit,                  # 1/cache_bw
+                    terms.lockstep * B,   # c_ls
+                    terms.rowseq * B,     # c_rs
+                    terms.decode,         # c_dec (once per pass)
+                ])
+                meas.append(t_meas)
+                t_before = candidate_time(fp, spec.name, nbytes,
+                                          warm=warm, machine=base,
+                                          batch=B, **knobs)
+                points.append(CalibrationPoint(
+                    matrix=mname, config_name=spec.encode_knobs(knobs),
+                    fmt=spec.name, nbytes=int(nbytes),
+                    work_elems=int(terms.work_elems), measured=t_meas,
+                    modeled_before=t_before, batch=int(B)))
 
     A = np.asarray(feats, dtype=np.float64)
     t = np.asarray(meas, dtype=np.float64)

@@ -18,7 +18,8 @@ registered through the registry joins the oracle with no edit here.
 
 from __future__ import annotations
 
-from repro.autotune.cost_model import V5E, MachineModel, candidate_time
+from repro.autotune.cost_model import (V5E, MachineModel, candidate_time,
+                                       merge_knob_overrides)
 from repro.autotune.fingerprint import fingerprint
 from repro.core.params import PAPER, DtansParams
 from repro.sparse.registry import format_names, get_format
@@ -27,11 +28,19 @@ from repro.sparse.registry import format_names, get_format
 def oracle_times(a, *, warm: bool = True, machine: MachineModel = V5E,
                  params: DtansParams = PAPER,
                  formats: tuple | None = None,
+                 batch: int = 1,
+                 knob_overrides: dict | None = None,
                  lane_widths: tuple | None = None,
                  group_sizes: tuple | None = None,
                  block_shapes: tuple | None = None,
                  encode_cache: dict | None = None) -> dict[str, float]:
     """config_name -> exact-size modeled seconds, for every candidate.
+
+    ``batch`` prices a multi-RHS SpMM pass exactly as `select(batch=)`
+    does (same `candidate_time`), so selector-vs-oracle regret is
+    meaningful at every batch size. ``knob_overrides`` narrows any knob
+    domain by name, third-party specs included; the three named
+    keywords remain as sugar, exactly as in `select`.
 
     ``encode_cache`` (any mutable mapping) memoizes the expensive dtANS
     encodes across repeated calls (e.g. warm and cold evaluation of the
@@ -43,8 +52,10 @@ def oracle_times(a, *, warm: bool = True, machine: MachineModel = V5E,
     """
     fp = fingerprint(a, params=params)
     enc = encode_cache if encode_cache is not None else {}
-    overrides = {"lane_width": lane_widths, "group_size": group_sizes,
-                 "block_shape": block_shapes}
+    overrides = merge_knob_overrides(knob_overrides,
+                                     lane_widths=lane_widths,
+                                     group_sizes=group_sizes,
+                                     block_shapes=block_shapes)
     if formats is None:
         formats = format_names(selectable=True)
     times: dict[str, float] = {}
@@ -54,7 +65,8 @@ def oracle_times(a, *, warm: bool = True, machine: MachineModel = V5E,
             b = spec.nbytes_constructed(a, params=params, artifacts=enc,
                                         **knobs)
             times[spec.encode_knobs(knobs)] = candidate_time(
-                fp, fmt, b, warm=warm, machine=machine, **knobs)
+                fp, fmt, b, warm=warm, machine=machine, batch=batch,
+                **knobs)
     return times
 
 

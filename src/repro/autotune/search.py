@@ -34,7 +34,9 @@ import weakref
 
 from repro.autotune.cache import DecisionCache, default_cache
 from repro.autotune.cost_model import (V5E, Candidate, MachineModel,
-                                       candidate_time, candidates)
+                                       candidate_time, candidates,
+                                       merge_knob_overrides,
+                                       render_knob_overrides)
 from repro.autotune.fingerprint import Fingerprint, fingerprint
 from repro.core.params import PAPER, DtansParams
 from repro.sparse.registry import (KnobbedConfigMixin, format_names,
@@ -71,6 +73,9 @@ class Decision(KnobbedConfigMixin):
     machine: str
     fingerprint_key: str
     refined: bool
+    # Number of right-hand sides the selection was priced for (the
+    # SpMM batch; 1 = the classic single-vector SpMV regime).
+    batch: int = 1
     # Median wall-clock seconds of the winner's real kernel when the
     # selection ran with ``measure=True``; None for modeled-only runs.
     # Modeled and measured seconds are different currencies (interpret
@@ -123,7 +128,7 @@ def clear_memo() -> None:
 
 def _refine(a, cand: Candidate, fp: Fingerprint, *, warm: bool,
             machine: MachineModel, params: DtansParams,
-            artifacts: dict) -> Candidate:
+            artifacts: dict, batch: int = 1) -> Candidate:
     """Replace an estimated candidate size with the constructed truth.
 
     Registry-generic: `FormatSpec.nbytes_constructed` builds/encodes
@@ -136,16 +141,19 @@ def _refine(a, cand: Candidate, fp: Fingerprint, *, warm: bool,
     kn = cand.knobs_dict()
     b = spec.nbytes_constructed(a, params=params, artifacts=artifacts,
                                 **kn)
-    t = candidate_time(fp, cand.fmt, b, warm=warm, machine=machine, **kn)
+    t = candidate_time(fp, cand.fmt, b, warm=warm, machine=machine,
+                       batch=batch, **kn)
     return dataclasses.replace(cand, nbytes=int(b), modeled_time=t,
                                exact_size=True)
 
 
 def select(a, *, machine: MachineModel = V5E, warm: bool = True,
            formats: tuple | None = None, budget: int = 0,
+           batch: int = 1,
            measure: bool = False, measure_warmup: int = 1,
            measure_repeats: int = 3, interpret: bool = True,
            params: DtansParams = PAPER,
+           knob_overrides: dict | None = None,
            lane_widths: tuple | None = None,
            group_sizes: tuple | None = None,
            block_shapes: tuple | None = None,
@@ -163,21 +171,32 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
         registered there joins the sweep with no edit here).
       budget: number of top estimated candidates to construct for exact
         sizes before the final argmin (0 = fingerprint estimates only).
+      batch: number of right-hand sides the workload contracts per pass
+        (the SpMM batch). Matrix bytes and entropy-decode work are paid
+        once per pass, x/y bytes and contraction work per RHS — so the
+        winning format can flip as B grows (decode overhead amortizes).
+        Part of both cache keys.
       measure: with ``budget > 0``, additionally wall-clock time the
         top-``budget`` candidates' real kernels
-        (`repro.autotune.measure`) and rank them by measured seconds;
-        the winner always comes from the measured head (modeled tail
-        times are a different currency). The winning measurement lands
-        in ``Decision.measured_time``.
+        (`repro.autotune.measure`, at this ``batch``) and rank them by
+        measured seconds; the winner always comes from the measured
+        head (modeled tail times are a different currency). The winning
+        measurement lands in ``Decision.measured_time``.
       measure_warmup / measure_repeats: timing harness knobs
         (median-of-``measure_repeats`` after ``measure_warmup`` calls).
       interpret: run measured kernels in Pallas interpret mode (CPU CI
         fallback); pass ``False`` on an accelerator host.
-      lane_widths / group_sizes / block_shapes: knob-domain overrides
-        for the formats declaring those knobs; None (default) sweeps
-        each format's own `FormatSpec.knob_domains` — built-in AND
-        third-party formats alike, matching what the exhaustive oracle
-        enumerates.
+      knob_overrides: generic knob-domain overrides, ``{knob name ->
+        domain tuple}`` — narrows/extends ANY format's sweep (third-
+        party specs' knobs included) without a new named keyword.
+        Entries for knobs a format does not declare are ignored by that
+        format.
+      lane_widths / group_sizes / block_shapes: legacy sugar for the
+        three built-in override knobs (deprecated in favor of
+        ``knob_overrides``; kept working — the named form wins when
+        both spell the same knob). None (default) sweeps each format's
+        own `FormatSpec.knob_domains` — built-in AND third-party
+        formats alike, matching what the exhaustive oracle enumerates.
       cache: decision cache; ``None`` uses the process default
         (persistent on disk). Pass ``DecisionCache(path=None)`` for a
         memory-only cache.
@@ -190,18 +209,17 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
     if measure and budget <= 0:
         raise ValueError("measure=True requires budget > 0 (only the "
                          "refined head is packed and timed)")
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1; got {batch}")
     if formats is None:
         formats = format_names(selectable=True)
     cache = cache if cache is not None else default_cache()
 
-    def sweep(vals, render) -> str | None:
-        """Canonical form of one knob-domain override (None = the
-        specs' own domains, also the cache-key spelling)."""
-        return None if vals is None else ",".join(render(v)
-                                                  for v in vals)
-
-    sweeps = (sweep(lane_widths, str), sweep(group_sizes, str),
-              sweep(block_shapes, lambda b: f"{b[0]}x{b[1]}"))
+    overrides = merge_knob_overrides(knob_overrides,
+                                     lane_widths=lane_widths,
+                                     group_sizes=group_sizes,
+                                     block_shapes=block_shapes)
+    ko = render_knob_overrides(overrides)
     # The requested formats' LIVE knob domains enter both cache keys: a
     # release (or in-process re-registration) that changes a format's
     # default sweep must invalidate decisions that never priced the new
@@ -213,8 +231,8 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
     # The cache object is part of the memo key: a repeat select with a
     # *different* cache must consult (and populate) that cache, not
     # short-circuit on the memo.
-    cfg = (machine, warm, tuple(formats), int(budget), sweeps, doms,
-           params, cache, bool(measure), int(measure_warmup),
+    cfg = (machine, warm, tuple(formats), int(budget), int(batch), ko,
+           doms, params, cache, bool(measure), int(measure_warmup),
            int(measure_repeats), bool(interpret))
     if use_cache:
         hit = _memo.get(id(a))
@@ -225,9 +243,8 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
     pp = params
     key_parts = [fp.key(), machine.signature(), f"warm={int(warm)}",
                  ",".join(formats), f"budget={int(budget)}",
-                 "w:" + (sweeps[0] if sweeps[0] is not None else "def"),
-                 "G:" + (sweeps[1] if sweeps[1] is not None else "def"),
-                 "B:" + (sweeps[2] if sweeps[2] is not None else "def"),
+                 f"batch={int(batch)}",
+                 "ko:" + ko,
                  "doms:" + hashlib.sha1(doms.encode()).hexdigest()[:12],
                  f"w{pp.w_bits}k{pp.k_bits}l{pp.l}o{pp.o}"
                  f"f{pp.f}m{pp.m_bits}"]
@@ -250,9 +267,8 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
                 return dec
 
     cands = candidates(fp, machine=machine, warm=warm, params=params,
-                       formats=tuple(formats), lane_widths=lane_widths,
-                       group_sizes=group_sizes,
-                       block_shapes=block_shapes)
+                       formats=tuple(formats), batch=batch,
+                       knob_overrides=overrides)
     if not cands:
         # Possible since FormatSpec.admit: e.g. bcsr_dtans's fill-in
         # guard prunes every block shape on scatter-structured
@@ -266,7 +282,7 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
     if budget > 0:
         arts = artifacts if artifacts is not None else {}
         head = [_refine(a, c, fp, warm=warm, machine=machine,
-                        params=params, artifacts=arts)
+                        params=params, artifacts=arts, batch=batch)
                 for c in cands[:budget]]
         refined = any(h is not c for h, c in zip(head, cands))
         if measure:
@@ -274,7 +290,7 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
             head = [dataclasses.replace(
                         h, measured_time=measure_candidate(
                             a, h, params=params, interpret=interpret,
-                            warmup=measure_warmup,
+                            warmup=measure_warmup, batch=batch,
                             repeats=measure_repeats, artifacts=arts))
                     for h in head]
             refined = True
@@ -293,7 +309,7 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
         fmt=best.fmt, knobs=best.knobs, nbytes=best.nbytes,
         modeled_time=best.modeled_time, exact_size=best.exact_size,
         warm=warm, machine=machine.name, fingerprint_key=fp.key(),
-        refined=refined,
+        refined=refined, batch=int(batch),
         measured_time=best.measured_time,
         leaderboard=tuple((c.config_name, c.nbytes, c.modeled_time,
                            c.measured_time) for c in cands[:5]),
@@ -309,6 +325,7 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
 
 def choose_dtans_config(a, *, machine: MachineModel = V5E,
                         warm: bool = True, budget: int = 0,
+                        batch: int = 1,
                         measure: bool = False, interpret: bool = True,
                         params: DtansParams = PAPER,
                         cache: DecisionCache | None = None,
@@ -327,6 +344,6 @@ def choose_dtans_config(a, *, machine: MachineModel = V5E,
     """
     return select(a, machine=machine, warm=warm,
                   formats=format_names(selectable=True, decodes=True),
-                  budget=budget, measure=measure, interpret=interpret,
-                  params=params, cache=cache,
+                  budget=budget, batch=batch, measure=measure,
+                  interpret=interpret, params=params, cache=cache,
                   use_cache=use_cache, artifacts=artifacts)

@@ -90,6 +90,41 @@ def bcsr_spmv_pallas(block_cols, val, x, interpret=True):
     )(block_cols, val, x)
 
 
+def _bcsr_spmm_kernel(col_ref, val_ref, x_ref, y_ref):
+    cols = col_ref[0]         # (W,)
+    vals = val_ref[0]         # (W, r, c)
+    x = x_ref[...]            # (n, B)
+    W, r, c = vals.shape
+    n = x.shape[0]
+    mask = cols >= 0
+    colidx = jnp.maximum(cols, 0)[:, None] * c + \
+        jax.lax.broadcasted_iota(jnp.int32, (W, c), 1)
+    xg = jnp.take(x, jnp.clip(colidx, 0, n - 1), axis=0)   # (W, c, B)
+    contrib = jnp.where(mask[:, None, None, None],
+                        vals[..., None] * xg[:, None, :, :], 0)
+    y_ref[0, :, :] = jnp.sum(contrib, axis=(0, 2))         # (r, B)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bcsr_spmm_pallas(block_cols, val, x, interpret=True):
+    """Multi-RHS BCSR kernel: x is (n, B); returns (S, r, B) — each
+    dense tile is gathered once and contracted against all B columns."""
+    S, W, r, c = val.shape
+    n, B = x.shape
+    return pl.pallas_call(
+        _bcsr_spmm_kernel,
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((1, W), lambda s: (s, 0)),
+            pl.BlockSpec((1, W, r, c), lambda s: (s, 0, 0, 0)),
+            pl.BlockSpec((n, B), lambda s: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, r, B), lambda s: (s, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, r, B), val.dtype),
+        interpret=interpret,
+    )(block_cols, val, x)
+
+
 def bcsr_spmv_ref(block_cols: np.ndarray, val: np.ndarray, x: np.ndarray):
     """Pure-jnp oracle for the BCSR kernel ((S, r) output)."""
     x = jnp.asarray(x)

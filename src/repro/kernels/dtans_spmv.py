@@ -94,3 +94,69 @@ def dtans_spmv_pallas(stream, esc, ns, nnz, tabs, x, *, params, pattern,
         out_shape=jax.ShapeDtypeStruct((S, lane_width), out_dtype),
         interpret=interpret,
     )(stream, esc, ns, nnz, *tabs, x)
+
+
+def _spmm_kernel(stream_ref, esc_ref, ns_ref, nnz_ref, sym_ref, dig_ref,
+                 base_ref, isesc_ref, x_ref, y_ref, *, params: DtansParams,
+                 pattern: tuple, max_nseg: int, out_dtype):
+    """Fused decode + multi-RHS contraction: decode each segment ONCE,
+    contract it against all B columns of x before the next segment —
+    the amortization the batched cost model prices (decode work is per
+    matrix, contraction work per right-hand side)."""
+    arr = DecodeArrays(
+        stream=stream_ref[0, :],
+        esc=esc_ref[:, 0, :],
+        tab_symbol=sym_ref[...],
+        tab_digit=dig_ref[...],
+        tab_base=base_ref[...],
+        tab_is_esc=isesc_ref[...],
+        ns=ns_ref[0, :],
+        nnz=nnz_ref[0, :],
+    )
+    x = x_ref[...]                               # (n, B)
+    n = x.shape[0]
+    state = init_state(arr, params)
+    acc0 = jnp.zeros((arr.ns.shape[0], x.shape[1]), dtype=out_dtype)
+
+    def body(j, carry):
+        state, acc = carry
+        state, cols, vbits, valid = segment_step(j, state, arr, params,
+                                                 pattern)
+        vals = bits_to_value(vbits, out_dtype)               # (h, L)
+        xg = jnp.take(x, jnp.clip(cols, 0, n - 1), axis=0)   # (h, L, B)
+        contrib = jnp.where(valid[..., None], vals[..., None] * xg, 0)
+        return state, acc + jnp.sum(contrib, axis=0)
+
+    _, acc = jax.lax.fori_loop(0, max_nseg, body, (state, acc0))
+    y_ref[0, :, :] = acc
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "params", "pattern", "max_nseg", "lane_width", "out_dtype", "interpret"))
+def dtans_spmm_pallas(stream, esc, ns, nnz, tabs, x, *, params, pattern,
+                      max_nseg, lane_width, out_dtype, interpret=True):
+    """Multi-RHS pallas_call wrapper: x is (n, B); returns (S, L, B)."""
+    S, Wmax = stream.shape
+    T, _, Emax = esc.shape
+    K = params.K
+    n, B = x.shape
+    kernel = functools.partial(_spmm_kernel, params=params, pattern=pattern,
+                               max_nseg=max_nseg, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((1, Wmax), lambda s: (s, 0)),      # stream slice
+            pl.BlockSpec((T, 1, Emax), lambda s: (0, s, 0)),  # escapes
+            pl.BlockSpec((1, lane_width), lambda s: (s, 0)),  # ns
+            pl.BlockSpec((1, lane_width), lambda s: (s, 0)),  # nnz
+            pl.BlockSpec((T, K), lambda s: (0, 0)),          # tab symbol
+            pl.BlockSpec((T, K), lambda s: (0, 0)),          # tab digit
+            pl.BlockSpec((T, K), lambda s: (0, 0)),          # tab base
+            pl.BlockSpec((T, K), lambda s: (0, 0)),          # tab is_esc
+            pl.BlockSpec((n, B), lambda s: (0, 0)),          # x (whole)
+        ],
+        out_specs=pl.BlockSpec((1, lane_width, B), lambda s: (s, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, lane_width, B), out_dtype),
+        interpret=interpret,
+    )(stream, esc, ns, nnz, *tabs, x)

@@ -3,6 +3,14 @@
 `spmv` is the user-facing  y = A x + y  on a CSR-dtANS matrix: it packs the
 format once (cached on the object), moves tensors to device, and dispatches
 to the fused Pallas kernel (interpret=True on CPU hosts, compiled on TPU).
+
+Every single-vector entry point has a multi-RHS sibling (`spmm`,
+`sell_spmm`, `rgcsr_spmm`, `bcsr_spmm`): ``x`` is (n, B), the result
+(m, B), and the matrix (for the dtANS family: the *decode*) is paid once
+for all B columns — the batched serving path `SparseLinear.apply`
+routes through. All eight share the ``(mat, x, y=None, *, interpret=)``
+signature; B == 1 delegates to the single-vector kernel, so spmm results
+at B=1 are bit-identical to spmv.
 """
 
 from __future__ import annotations
@@ -12,12 +20,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.csr_dtans import CSRdtANS
-from repro.kernels.bcsr_spmv import PackedBCSR, bcsr_spmv_pallas
+from repro.kernels.bcsr_spmv import (PackedBCSR, bcsr_spmm_pallas,
+                                     bcsr_spmv_pallas)
 from repro.kernels.dtans_decode import dtans_decode_pallas
-from repro.kernels.dtans_spmv import dtans_spmv_pallas
+from repro.kernels.dtans_spmv import dtans_spmm_pallas, dtans_spmv_pallas
 from repro.kernels.pack import PackedMatrix, pack_matrix
-from repro.kernels.rgcsr_spmv import PackedRGCSR, rgcsr_spmv_pallas
-from repro.kernels.sell_spmv import PackedSELL, sell_spmv_pallas
+from repro.kernels.rgcsr_spmv import (PackedRGCSR, rgcsr_spmm_pallas,
+                                      rgcsr_spmv_pallas)
+from repro.kernels.sell_spmv import (PackedSELL, sell_spmm_pallas,
+                                     sell_spmv_pallas)
 
 _PACK_CACHE_FIELD = "_packed_cache"
 
@@ -61,6 +72,51 @@ def spmv(mat: CSRdtANS | PackedMatrix, x, y=None, *,
     return out
 
 
+def _check_rhs(x, n: int) -> None:
+    if x.ndim != 2:
+        raise ValueError(f"spmm expects x of shape (n, B); got {x.shape} "
+                         f"(use spmv for a single 1-D vector)")
+    if x.shape[0] != n:
+        raise ValueError(f"spmm rhs has {x.shape[0]} rows; matrix has "
+                         f"{n} columns")
+
+
+def _empty_y(m: int, y, dt):
+    """B == 0 result: a serving pool with zero active requests is a
+    legal input and must not reach the kernels (a zero-size grid
+    dimension is not)."""
+    out = jnp.zeros((m, 0), dtype=dt)
+    if y is not None:
+        out = out + jnp.asarray(y, dtype=dt)
+    return out
+
+
+def spmm(mat: CSRdtANS | PackedMatrix, x, y=None, *,
+         interpret: bool = True) -> jax.Array:
+    """Y = A X + Y, X: (n, B) — decode once, contract all B columns in
+    the fused kernel. B == 1 runs the single-vector `spmv` kernel, so
+    the results are bit-identical to it."""
+    pm = get_packed(mat) if isinstance(mat, CSRdtANS) else mat
+    dt = _out_dtype(pm)
+    m, n = pm.shape
+    x = jnp.asarray(x, dtype=dt)
+    _check_rhs(x, n)
+    if x.shape[1] == 0:
+        return _empty_y(m, y, dt)
+    if x.shape[1] == 1:
+        out = spmv(pm, x[:, 0], interpret=interpret)[:, None]
+    else:
+        acc = dtans_spmm_pallas(
+            jnp.asarray(pm.stream), jnp.asarray(pm.esc), jnp.asarray(pm.ns),
+            jnp.asarray(pm.nnz), _tabs(pm), x,
+            params=pm.params, pattern=pm.pattern, max_nseg=pm.max_nseg,
+            lane_width=pm.lane_width, out_dtype=dt, interpret=interpret)
+        out = acc.reshape(-1, x.shape[1])[:m]
+    if y is not None:
+        out = out + jnp.asarray(y, dtype=dt)
+    return out
+
+
 def decode(mat: CSRdtANS | PackedMatrix, *, interpret: bool = True):
     """Decompress to padded (S, L, max_nnz) (cols, vals); cols==-1 pads."""
     pm = get_packed(mat) if isinstance(mat, CSRdtANS) else mat
@@ -89,6 +145,27 @@ def sell_spmv(ps: PackedSELL, x, y=None, *,
     return out
 
 
+def sell_spmm(ps: PackedSELL, x, y=None, *,
+              interpret: bool = True) -> jax.Array:
+    """Multi-RHS SELL: Y = A X + Y, X: (n, B). Shares the `spmm`
+    signature; B == 1 delegates to `sell_spmv` (bit-identical)."""
+    m, n = ps.shape
+    x = jnp.asarray(x, dtype=ps.values.dtype)
+    _check_rhs(x, n)
+    if x.shape[1] == 0:
+        return _empty_y(m, y, x.dtype)
+    if x.shape[1] == 1:
+        out = sell_spmv(ps, x[:, 0], interpret=interpret)[:, None]
+    else:
+        acc = sell_spmm_pallas(jnp.asarray(ps.indices),
+                               jnp.asarray(ps.values), x,
+                               interpret=interpret)
+        out = acc.reshape(-1, x.shape[1])[:m]
+    if y is not None:
+        out = out + jnp.asarray(y, dtype=out.dtype)
+    return out
+
+
 def rgcsr_spmv(pr: PackedRGCSR, x, y=None, *,
                interpret: bool = True) -> jax.Array:
     """Row-grouped CSR SpMVM: y = A x + y (delta prefix-sum in kernel).
@@ -105,6 +182,28 @@ def rgcsr_spmv(pr: PackedRGCSR, x, y=None, *,
     return out
 
 
+def rgcsr_spmm(pr: PackedRGCSR, x, y=None, *,
+               interpret: bool = True) -> jax.Array:
+    """Multi-RHS RGCSR: Y = A X + Y, X: (n, B). Shares the `spmm`
+    signature; B == 1 delegates to `rgcsr_spmv` (bit-identical)."""
+    m, n = pr.shape
+    x = jnp.asarray(x, dtype=pr.values.dtype)
+    _check_rhs(x, n)
+    if x.shape[1] == 0:
+        return _empty_y(m, y, x.dtype)
+    if x.shape[1] == 1:
+        out = rgcsr_spmv(pr, x[:, 0], interpret=interpret)[:, None]
+    else:
+        acc = rgcsr_spmm_pallas(jnp.asarray(pr.deltas),
+                                jnp.asarray(pr.values),
+                                jnp.asarray(pr.nnz), x,
+                                interpret=interpret)
+        out = acc.reshape(-1, x.shape[1])[:m]
+    if y is not None:
+        out = out + jnp.asarray(y, dtype=out.dtype)
+    return out
+
+
 def bcsr_spmv(pb: PackedBCSR, x, y=None, *,
               interpret: bool = True) -> jax.Array:
     """Blocked-CSR SpMVM: y = A x + y (dense r x c tiles in kernel).
@@ -116,6 +215,27 @@ def bcsr_spmv(pb: PackedBCSR, x, y=None, *,
                            jnp.asarray(x, dtype=pb.values.dtype),
                            interpret=interpret)
     out = acc.reshape(-1)[:m]
+    if y is not None:
+        out = out + jnp.asarray(y, dtype=out.dtype)
+    return out
+
+
+def bcsr_spmm(pb: PackedBCSR, x, y=None, *,
+              interpret: bool = True) -> jax.Array:
+    """Multi-RHS BCSR: Y = A X + Y, X: (n, B). Shares the `spmm`
+    signature; B == 1 delegates to `bcsr_spmv` (bit-identical)."""
+    m, n = pb.shape
+    x = jnp.asarray(x, dtype=pb.values.dtype)
+    _check_rhs(x, n)
+    if x.shape[1] == 0:
+        return _empty_y(m, y, x.dtype)
+    if x.shape[1] == 1:
+        out = bcsr_spmv(pb, x[:, 0], interpret=interpret)[:, None]
+    else:
+        acc = bcsr_spmm_pallas(jnp.asarray(pb.block_cols),
+                               jnp.asarray(pb.values), x,
+                               interpret=interpret)
+        out = acc.reshape(-1, x.shape[1])[:m]
     if y is not None:
         out = out + jnp.asarray(y, dtype=out.dtype)
     return out

@@ -96,3 +96,37 @@ def rgcsr_spmv_ref(deltas: np.ndarray, val: np.ndarray, nnz: np.ndarray,
             < nnz[..., None])
     xg = jnp.take(x, jnp.clip(cols, 0, x.shape[0] - 1), axis=0)
     return jnp.sum(jnp.where(mask, val * xg, 0), axis=2)
+
+
+def _rgcsr_spmm_kernel(delta_ref, val_ref, nnz_ref, x_ref, y_ref):
+    d = delta_ref[0]          # (G, Wg)
+    v = val_ref[0]
+    nnz = nnz_ref[0]          # (G,)
+    x = x_ref[...]            # (n, B)
+    cols = jnp.cumsum(d, axis=1)          # per-row delta prefix-sum
+    mask = (jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+            < nnz[:, None])
+    xg = jnp.take(x, jnp.clip(cols, 0, x.shape[0] - 1), axis=0)  # (G, Wg, B)
+    contrib = jnp.where(mask[..., None], v[..., None] * xg, 0)
+    y_ref[0, :, :] = jnp.sum(contrib, axis=1)                    # (G, B)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rgcsr_spmm_pallas(deltas, val, nnz, x, interpret=True):
+    """Multi-RHS RGCSR kernel: x is (n, B); returns (S, G, B). The
+    delta prefix-sum runs once per group and feeds all B columns."""
+    S, G, Wg = deltas.shape
+    n, B = x.shape
+    return pl.pallas_call(
+        _rgcsr_spmm_kernel,
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((1, G, Wg), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, G, Wg), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, G), lambda s: (s, 0)),
+            pl.BlockSpec((n, B), lambda s: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, B), lambda s: (s, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, G, B), val.dtype),
+        interpret=interpret,
+    )(deltas, val, nnz, x)

@@ -78,3 +78,33 @@ def sell_spmv_ref(idx: np.ndarray, val: np.ndarray, x: np.ndarray):
     mask = idx >= 0
     xg = jnp.take(jnp.asarray(x), jnp.clip(idx, 0, x.shape[0] - 1), axis=0)
     return jnp.sum(jnp.where(mask, val * xg, 0), axis=2)
+
+
+def _sell_spmm_kernel(idx_ref, val_ref, x_ref, y_ref):
+    idx = idx_ref[0]          # (L, Wg)
+    val = val_ref[0]
+    x = x_ref[...]            # (n, B)
+    mask = idx >= 0
+    xg = jnp.take(x, jnp.clip(idx, 0, x.shape[0] - 1), axis=0)  # (L, Wg, B)
+    contrib = jnp.where(mask[..., None], val[..., None] * xg, 0)
+    y_ref[0, :, :] = jnp.sum(contrib, axis=1)                   # (L, B)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sell_spmm_pallas(idx, val, x, interpret=True):
+    """Multi-RHS SELL kernel: x is (n, B); returns (S, L, B) — the
+    slice's indices/values load once and contract all B columns."""
+    S, L, Wg = idx.shape
+    n, B = x.shape
+    return pl.pallas_call(
+        _sell_spmm_kernel,
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((1, L, Wg), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, L, Wg), lambda s: (s, 0, 0)),
+            pl.BlockSpec((n, B), lambda s: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, L, B), lambda s: (s, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, L, B), val.dtype),
+        interpret=interpret,
+    )(idx, val, x)

@@ -5,6 +5,7 @@
   loss_fn(params, cfg, batch)               -> (loss, metrics)
   prefill(params, cfg, batch, max_seq)      -> (logits, cache, pos)
   decode_step(params, cfg, cache, tok, pos) -> (logits, cache)
+  decode_hidden(params, cfg, cache, tok, pos) -> (hidden, cache)
   make_decode_cache(cfg, batch_size, seq)   -> cache pytree
 """
 
@@ -75,6 +76,15 @@ def prefill(params, cfg: ArchConfig, batch, max_seq=None):
 
 def decode_step(params, cfg: ArchConfig, caches, token, pos):
     return _mod(cfg).decode_step(params, cfg, caches, token, pos)
+
+
+def decode_hidden(params, cfg: ArchConfig, caches, token, pos):
+    """One serving step stopping at the final norm: (hidden, cache)
+    with hidden (B, 1, d_model) — what a compressed LM head
+    (`repro.serving.sparse_linear.SparseLinear`) consumes in place of
+    `decode_step`'s dense-logits path. ``decode_step(...) ==
+    (lm_head(params["embed"], hidden), cache)`` for every family."""
+    return _mod(cfg).decode_hidden(params, cfg, caches, token, pos)
 
 
 def make_decode_cache(cfg: ArchConfig, batch_size: int, seq_len: int,

@@ -134,7 +134,10 @@ def prefill(params, cfg: ArchConfig, batch, max_seq=None):
             {"kv": caches, "memory": memory}, jnp.int32(S))
 
 
-def decode_step(params, cfg: ArchConfig, caches, token, pos):
+def decode_hidden(params, cfg: ArchConfig, caches, token, pos):
+    """One decoder step up to the final norm — the hidden states the
+    LM head (dense or sparse) consumes; `decode_step` == lm_head of
+    this (same contract as `transformer.decode_hidden`)."""
     x = embed(params["embed"], token)
     B = token.shape[0]
     positions = jnp.full((B, 1), pos, dtype=jnp.int32)
@@ -148,8 +151,12 @@ def decode_step(params, cfg: ArchConfig, caches, token, pos):
 
     x, new_kv = jax.lax.scan(body, x, (params["dec_layers"], caches["kv"]))
     x = rmsnorm(params["dec_norm"], x, cfg.norm_eps)
-    return lm_head(params["embed"], x), {"kv": new_kv,
-                                         "memory": memory}
+    return x, {"kv": new_kv, "memory": memory}
+
+
+def decode_step(params, cfg: ArchConfig, caches, token, pos):
+    x, new_caches = decode_hidden(params, cfg, caches, token, pos)
+    return lm_head(params["embed"], x), new_caches
 
 
 def make_decode_cache(cfg: ArchConfig, batch, seq_len, memory_len=None,

@@ -188,7 +188,10 @@ def make_decode_cache(cfg: ArchConfig, batch, seq_len, dtype=None):
     return out
 
 
-def decode_step(params, cfg: ArchConfig, caches, token, pos):
+def decode_hidden(params, cfg: ArchConfig, caches, token, pos):
+    """One serving step up to the final norm — the hidden states the
+    LM head (dense or sparse) consumes; `decode_step` == lm_head of
+    this (same contract as `transformer.decode_hidden`)."""
     every, n_groups, n_tail = _plan(cfg)
     x = embed(params["embed"], token)
     B = token.shape[0]
@@ -236,4 +239,9 @@ def decode_step(params, cfg: ArchConfig, caches, token, pos):
     new_caches = {"ssm": new_ssm, "x0": caches["x0"]}
     if new_attn is not None:
         new_caches["attn"] = new_attn
+    return x, new_caches
+
+
+def decode_step(params, cfg: ArchConfig, caches, token, pos):
+    x, new_caches = decode_hidden(params, cfg, caches, token, pos)
     return lm_head(params["embed"], x), new_caches

@@ -112,9 +112,12 @@ def prefill(params, cfg: ArchConfig, batch, max_seq: int | None = None):
     return logits, caches, jnp.int32(S)
 
 
-def decode_step(params, cfg: ArchConfig, caches, token, pos):
-    """One serving step: token (B, 1) int32, pos () int32 — the write
-    position (number of tokens already in the cache)."""
+def decode_hidden(params, cfg: ArchConfig, caches, token, pos):
+    """One serving step up to (and including) the final norm: the
+    (B, 1, d) hidden states the LM head — dense `lm_head` or a
+    compressed `SparseLinear` — consumes. `decode_step` is exactly
+    ``lm_head(decode_hidden(...))``; the serving engine calls this
+    directly when the output projection is sparse."""
     x = embed(params["embed"], token)
     B = token.shape[0]
     positions = jnp.full((B, 1), pos, dtype=jnp.int32)
@@ -127,6 +130,13 @@ def decode_step(params, cfg: ArchConfig, caches, token, pos):
 
     x, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, new_caches
+
+
+def decode_step(params, cfg: ArchConfig, caches, token, pos):
+    """One serving step: token (B, 1) int32, pos () int32 — the write
+    position (number of tokens already in the cache)."""
+    x, new_caches = decode_hidden(params, cfg, caches, token, pos)
     return lm_head(params["embed"], x), new_caches
 
 

@@ -10,7 +10,11 @@ per-token decode, where weight bytes dominate).
 Sparse mode: `compress_lm_head` swaps the output projection for a
 SparseLinear (pruned + entropy-coded). The LM head is the single largest
 matrix of small LMs (vocab x d) and is matvec-bound at decode — exactly
-the paper's target workload.
+the paper's target workload. Each pooled decode step stops the jit'd
+model at the final norm (`api.decode_hidden`) and contracts the
+(slots, 1, d) hidden states against the compressed head in ONE fused
+multi-RHS SpMM (`SparseLinear.apply` -> `ops.spmm`): one entropy decode
+per step, amortized over every active slot.
 """
 
 from __future__ import annotations
@@ -47,11 +51,24 @@ class Engine:
         self.greedy = greedy
         self.queue: list[Request] = []
         self.active: list[Request | None] = [None] * slots
+        #: Completed requests in completion order, appended by `step`
+        #: and drained by `run_until_drained`.
+        self.finished: list[Request] = []
+        # Monotonic default rid: the old len(queue) default collided as
+        # soon as submits interleaved with steps (queue drains), making
+        # drained results ambiguous to correlate.
+        self._next_rid = 0
         self.pos = np.zeros(slots, dtype=np.int32)
         self.cache = api.make_decode_cache(cfg, slots, max_seq,
                                            dtype=jnp.float32)
         self._decode = jax.jit(
             lambda p, c, t, pos: api.decode_step(p, cfg, c, t, pos))
+        # Sparse mode stops the jit'd step at the hidden states; the
+        # pooled (slots, 1, d) batch then feeds the compressed head's
+        # fused SpMM kernel (one entropy decode per step, amortized
+        # over every active slot).
+        self._decode_hidden = jax.jit(
+            lambda p, c, t, pos: api.decode_hidden(p, cfg, c, t, pos))
 
     # --- sparse head ---------------------------------------------------------
     @classmethod
@@ -76,14 +93,19 @@ class Engine:
         return SparseLinear.from_dense(w, sparsity=sparsity, **kw)
 
     def _head(self, hidden):
-        """hidden: (B, 1, d) -> logits (B, 1, vocab)."""
+        """hidden: (B, 1, d) -> logits (B, 1, vocab) through the
+        compressed head's fused SpMM path (`SparseLinear.apply` ->
+        `ops.spmm`: decode once, contract all B pooled hidden states)."""
         if self.sparse_head is None:
             raise RuntimeError("dense path returns logits directly")
         return self.sparse_head.apply(hidden)
 
     # --- request lifecycle ----------------------------------------------------
     def submit(self, prompt, max_new_tokens: int, rid=None) -> Request:
-        r = Request(rid=rid if rid is not None else len(self.queue),
+        if rid is None:
+            rid = self._next_rid
+            self._next_rid += 1
+        r = Request(rid=rid,
                     prompt=np.asarray(prompt, dtype=np.int32),
                     max_new_tokens=max_new_tokens)
         self.queue.append(r)
@@ -119,11 +141,16 @@ class Engine:
         # sync by construction (prefill aligns pos to the max + padding).
         pos = int(self.pos.max())
         if self.sparse_head is not None:
-            # hidden-state decode + sparse LM head
-            logits, self.cache = self._decode(self.params, self.cache,
-                                              jnp.asarray(toks),
-                                              jnp.int32(pos))
-            logits = np.asarray(logits, dtype=np.float32)
+            # hidden-state decode, then the compressed LM head: the
+            # pooled (slots, 1, d) hidden states contract against the
+            # entropy-coded head in ONE fused SpMM (decode amortized
+            # over the whole batch) — the dense in-model head is never
+            # consulted in sparse mode.
+            hidden, self.cache = self._decode_hidden(self.params,
+                                                     self.cache,
+                                                     jnp.asarray(toks),
+                                                     jnp.int32(pos))
+            logits = np.asarray(self._head(hidden), dtype=np.float32)
         else:
             logits, self.cache = self._decode(self.params, self.cache,
                                               jnp.asarray(toks),
@@ -140,12 +167,17 @@ class Engine:
             if len(r.out) >= r.max_new_tokens:
                 r.done = True
                 self.active[s] = None
+                self.finished.append(r)
         return produced
 
     def run_until_drained(self, max_steps: int = 10000) -> list[Request]:
-        finished: list[Request] = []
+        """Step until queue and slots are empty; returns the completed
+        requests in completion order (including any that finished in
+        manual `step` calls before this drain and were not yet
+        reported)."""
         steps = 0
         while (self.queue or any(self.active)) and steps < max_steps:
             self.step()
             steps += 1
+        finished, self.finished = self.finished, []
         return finished

@@ -7,8 +7,10 @@ surviving values (8-bit centroids make the value distribution low-entropy,
 which is what dtANS compresses; raw float32 mantissas would all escape) ->
 CSR-dtANS encode of W^T (so y = W^T-rows . x = SpMVM per output neuron).
 
-`apply` contracts a batch of activations against the decoded matrix; the
-decode runs through the same kernel machinery as `kernels/dtans_spmv`.
+`apply` contracts a batch of activations against the decoded matrix
+through the fused multi-RHS Pallas kernel (`ops.spmm`): one entropy
+decode per call, amortized over every request in the batch — the same
+kernel machinery as `kernels/dtans_spmv`, batched.
 """
 
 from __future__ import annotations
@@ -41,6 +43,7 @@ class SparseLinear:
                    value_bits: int = 8, lane_width: int = 128,
                    shared_table: bool = True, auto: bool = False,
                    autotune_budget: int = 0,
+                   autotune_batch: int = 1,
                    autotune_cache=None,
                    autotune_measure: bool = False,
                    autotune_machine=None) -> "SparseLinear":
@@ -65,7 +68,10 @@ class SparseLinear:
         top candidates to refine estimated sizes into exact ones;
         ``autotune_measure=True`` further wall-clock times those
         candidates' decode kernels and picks the measured-fastest
-        (`repro.autotune.measure`); ``autotune_machine`` substitutes a
+        (`repro.autotune.measure`); ``autotune_batch`` prices the
+        selection for a ``B``-RHS serving batch (decode amortizes over
+        the batch — the knob to set to the expected pool size);
+        ``autotune_machine`` substitutes a
         calibrated `MachineModel` (e.g. ``load_profile(...)``) for the
         default v5e constants; ``autotune_cache`` overrides the default
         persistent cache (pass ``repro.autotune.DecisionCache(path=None)``
@@ -83,6 +89,7 @@ class SparseLinear:
             from repro.sparse.registry import get_format
             decision = choose_dtans_config(
                 pruned, warm=True, budget=autotune_budget,
+                batch=autotune_batch,
                 measure=autotune_measure,
                 machine=autotune_machine
                 if autotune_machine is not None else V5E,
@@ -112,27 +119,19 @@ class SparseLinear:
     def apply(self, x, *, interpret: bool = True):
         """x: (..., d_in) -> (..., d_out).
 
-        Batched contraction against the decoded sparse matrix: decode once
-        (cols, vals), gather x at cols, reduce — the SpMM generalization of
-        the paper's SpMVM kernel (one x per request in the batch). Both
-        paths accumulate in the packed matrix's dtype (`ops.out_dtype`) —
-        a float64 weight is contracted in float64, matching the
-        single-vector SpMV path.
+        Every batch size routes through the fused Pallas SpMM kernel
+        (`ops.spmm`): the matrix decodes ONCE per call and contracts
+        against all B flattened rows of ``x`` in-kernel — the multi-RHS
+        generalization of the paper's SpMVM (B == 1 runs the
+        single-vector kernel and is bit-identical to `ops.spmv`).
+        Accumulation happens in the packed matrix's dtype
+        (`ops.out_dtype`) — a float64 weight contracts in float64.
         """
         dt = ops.out_dtype(self.packed)
         lead = x.shape[:-1]
         xb = jnp.asarray(x, dtype=dt).reshape(-1, self.d_in)
-        if xb.shape[0] == 1:
-            y = ops.spmv(self.packed, xb[0], interpret=interpret)[None]
-        else:
-            cols, vals = ops.decode(self.packed, interpret=interpret)
-            S, L, W = cols.shape
-            mask = cols >= 0
-            xg = jnp.take(xb, jnp.clip(cols, 0, self.d_in - 1),
-                          axis=1)                      # (B, S, L, W)
-            contrib = jnp.where(mask[None], xg * vals[None], 0.0)
-            y = contrib.sum(-1).reshape(xb.shape[0], S * L)[:, :self.d_out]
-        return y.reshape(*lead, self.d_out).astype(x.dtype)
+        y = ops.spmm(self.packed, xb.T, interpret=interpret)  # (d_out, B)
+        return y.T.reshape(*lead, self.d_out).astype(x.dtype)
 
     def apply_dense_reference(self, x):
         """Oracle: decode to dense and matmul (tests). Contracts in the

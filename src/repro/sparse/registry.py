@@ -19,6 +19,10 @@ subclass registered here; every consumer iterates the registry:
   the roofline model and `measure.calibrate`'s design matrix charge;
 * ``pack`` / ``runner`` / ``spmv_fn`` — the registered kernel path the
   timing harness and the conformance suite drive;
+* ``spmm_fn`` / ``spmm_runner`` / ``spmm`` — the multi-RHS path
+  (``X: (n, B)`` -> ``Y: (m, B)``): fused SpMM kernels where the
+  format has one, a generic per-column fallback otherwise, so every
+  registered format serves batches;
 * ``encode_knobs`` / ``decode_knobs`` — the canonical config-string
   round-trip (``"rgcsr_dtans[G=8,shared]"``), replacing ad-hoc
   ``p.startswith("G=")`` parsing;
@@ -295,6 +299,43 @@ class FormatSpec:
         packed = self.pack(a, params=params, **knobs)
         return self.runner(packed, x, interpret=interpret)()
 
+    # -- multi-RHS (SpMM) --------------------------------------------
+
+    @property
+    def spmm_fn(self):
+        """The public multi-RHS ``repro.kernels.ops`` entry point
+        (``X: (n, B)`` -> ``Y: (m, B)``), or None when the format has
+        no fused SpMM kernel — `spmm_runner` then falls back to one
+        `runner` call per column, so EVERY registered format exposes a
+        batched path (third-party specs included) and gains the fused
+        kernel by overriding only this property."""
+        return None
+
+    def spmm_runner(self, packed, x, *, interpret: bool = True):
+        """Zero-arg callable computing ``Y = A X`` (``X: (n, B)``) from
+        `pack`'s artifact — the batched analogue of `runner`, driven by
+        the timing harness (``measure.spmv_runner(batch=B)``), the
+        conformance suite and serving."""
+        fn = self.spmm_fn
+        if fn is not None:
+            return lambda: fn(packed, x, interpret=interpret)
+        x2 = np.asarray(x)
+        if x2.ndim != 2:
+            raise ValueError(f"{self.name}: spmm_runner expects x of "
+                             f"shape (n, B); got {x2.shape}")
+        runners = [self.runner(packed, x2[:, b], interpret=interpret)
+                   for b in range(x2.shape[1])]
+        import jax.numpy as jnp
+        return lambda: jnp.stack([jnp.asarray(r()) for r in runners],
+                                 axis=-1)
+
+    def spmm(self, a, x, *, params: DtansParams = PAPER,
+             interpret: bool = True, **knobs):
+        """One-shot ``Y = A X`` through the registered batched kernel
+        path — how the conformance suite sweeps every format over B."""
+        packed = self.pack(a, params=params, **knobs)
+        return self.spmm_runner(packed, x, interpret=interpret)()
+
     # -- encoded artifact (decodes=True formats) ---------------------
 
     def encode(self, a, *, params: DtansParams = PAPER, **knobs):
@@ -442,6 +483,12 @@ class DenseSpec(FormatSpec):
         xj = jnp.asarray(x, dtype=d.dtype)
         return jax.jit(lambda: d @ xj)
 
+    def spmm_runner(self, packed, x, *, interpret: bool = True):
+        # Dense ``A @ X`` is the same contraction for any number of
+        # right-hand sides — the single-vector runner already is the
+        # batched bandwidth anchor.
+        return self.runner(packed, x, interpret=interpret)
+
 
 class _RowSeqSpec(FormatSpec):
     """Shared machinery of the row-sequential baselines (csr / coo).
@@ -472,6 +519,26 @@ class _RowSeqSpec(FormatSpec):
         @jax.jit
         def run():
             return jnp.zeros(m, vals.dtype).at[rows].add(vals * xj[idx])
+
+        return run
+
+    def spmm_runner(self, packed, x, *, interpret: bool = True):
+        # Batched scatter-add stand-in: one (m, B) accumulator, the
+        # same row scatter, every RHS column updated per nonzero.
+        import jax
+        import jax.numpy as jnp
+        a = packed
+        m = a.shape[0]
+        rows = jnp.asarray(np.repeat(np.arange(m, dtype=np.int64),
+                                     np.diff(a.indptr)))
+        idx = jnp.asarray(a.indices)
+        vals = jnp.asarray(a.values)
+        xj = jnp.asarray(x, dtype=a.values.dtype)
+
+        @jax.jit
+        def run():
+            return jnp.zeros((m, xj.shape[1]), vals.dtype
+                             ).at[rows].add(vals[:, None] * xj[idx, :])
 
         return run
 
@@ -522,6 +589,11 @@ class SellSpec(FormatSpec):
         from repro.kernels import ops
         return ops.sell_spmv
 
+    @property
+    def spmm_fn(self):
+        from repro.kernels import ops
+        return ops.sell_spmm
+
     def pack(self, a, *, params=PAPER, artifacts=None, slice_height=32):
         from repro.kernels.sell_spmv import pack_sell
         return pack_sell(a, lane_width=int(slice_height))
@@ -558,6 +630,11 @@ class RgcsrSpec(FormatSpec):
     def spmv_fn(self):
         from repro.kernels import ops
         return ops.rgcsr_spmv
+
+    @property
+    def spmm_fn(self):
+        from repro.kernels import ops
+        return ops.rgcsr_spmm
 
     def pack(self, a, *, params=PAPER, artifacts=None, group_size=4):
         from repro.kernels.rgcsr_spmv import pack_rgcsr
@@ -597,6 +674,11 @@ class _DtansFamilySpec(FormatSpec):
     def spmv_fn(self):
         from repro.kernels import ops
         return ops.spmv
+
+    @property
+    def spmm_fn(self):
+        from repro.kernels import ops
+        return ops.spmm
 
     def pack(self, a, *, params=PAPER, artifacts=None, **knobs):
         from repro.kernels import ops
@@ -730,6 +812,11 @@ class BcsrSpec(FormatSpec):
     def spmv_fn(self):
         from repro.kernels import ops
         return ops.bcsr_spmv
+
+    @property
+    def spmm_fn(self):
+        from repro.kernels import ops
+        return ops.bcsr_spmm
 
     def pack(self, a, *, params=PAPER, artifacts=None,
              block_shape=(2, 2)):

@@ -458,6 +458,70 @@ class TestSelector:
         if dec.fmt == "bcsr_dtans":
             assert dec.lane_width == dec.block_shape[0]
 
+    def test_batched_selection_zero_regret_and_flip(self):
+        """The ISSUE's batched acceptance bar: `select(batch=B)` prices
+        decode amortization — on the synthetic suite at least one
+        matrix's winning format differs between B=1 and B=32 (per-RHS
+        contraction work overtakes the amortized per-pass costs), and
+        selector-vs-oracle regret stays 0 at both batch sizes."""
+        cache = DecisionCache(path=None)
+        flipped = []
+        for name, a64 in _mini_suite().items():
+            a = _f32(a64)
+            picks = {}
+            for B in (1, 32):
+                clear_memo()
+                dec = select(a, warm=True, batch=B, cache=cache)
+                assert dec.batch == B
+                best, t_best, times = oracle_best(
+                    a, warm=True, batch=B,
+                    encode_cache=self._ENC.setdefault(name, {}))
+                regret = times[dec.config_name] / t_best - 1.0
+                assert regret <= 1e-12, \
+                    f"{name}@B={B}: pick={dec.config_name} " \
+                    f"oracle={best} regret={regret:.4g}"
+                picks[B] = dec.config_name
+            if picks[1] != picks[32]:
+                flipped.append((name, picks[1], picks[32]))
+        assert flipped, "no matrix changed its winning format " \
+                        "between B=1 and B=32"
+
+    def test_batch_amortizes_decode_not_contraction(self):
+        """`work_time(terms, batch=B)` scales the contraction terms
+        with B but charges the decode term ONCE per pass — the fused
+        SpMM kernels' decode-once/contract-B shape; and `spmm_bytes`
+        pays the matrix once but x/y per RHS."""
+        from repro.autotune.cost_model import spmm_bytes, work_time
+        a = _f32(erdos_renyi(600, 7, np.random.default_rng(6)))
+        fp = fingerprint(a)
+        spec = get_format("dtans")
+        terms = spec.cost_terms(fp)
+        assert terms.decode > 0
+        per_rhs_ops = (terms.lockstep * V5E.spmv_ops_per_elem
+                       / V5E.vpu_rate)
+        assert work_time(terms, batch=8) == pytest.approx(
+            work_time(terms, batch=1) + 7 * per_rhs_ops)
+        b = spec.nbytes_estimate(fp)
+        assert spmm_bytes(b, fp.cols, fp.rows, fp.value_bytes, 8) == \
+            b + 8 * (fp.cols + fp.rows) * fp.value_bytes
+        assert spmm_bytes(b, fp.cols, fp.rows, fp.value_bytes) == \
+            spmv_bytes(b, fp.cols, fp.rows, fp.value_bytes)
+
+    def test_batch_in_cache_key(self):
+        """Decisions priced for different batch sizes must never serve
+        each other from the cache."""
+        a = _f32(banded(400, 4))
+        cache = DecisionCache(path=None)
+        clear_memo()
+        select(a, cache=cache)
+        select(a, batch=32, cache=cache)
+        assert len(cache) == 2
+
+    def test_batch_rejects_nonpositive(self):
+        with pytest.raises(ValueError, match="batch"):
+            select(_f32(banded(300, 3)), batch=0,
+                   cache=DecisionCache(path=None))
+
     def test_memo_hit_is_fast_and_identical(self):
         import time
         a = _f32(stencil_2d(30))

@@ -100,6 +100,43 @@ class TestHarness:
         t = measure_named(_small(), "sell", warmup=0, repeats=1)
         assert t > 0.0
 
+    @pytest.mark.parametrize("fmt,kw", [
+        ("csr", {}),
+        ("dense", {}),
+        ("sell", {"slice_height": 16}),
+        ("rgcsr", {"group_size": 8}),
+        ("dtans", {"lane_width": 32}),
+        ("bcsr", {"block_shape": (4, 4)}),
+    ])
+    def test_batched_runner_output_matches_dense(self, fmt, kw):
+        """spmv_runner(batch=B) drives the format's multi-RHS path
+        (fused SpMM kernels / batched scatter-add / dense A @ X) and
+        must compute Y = A X."""
+        a = _small()
+        X = np.random.default_rng(1).standard_normal(
+            (a.shape[1], 4)).astype(np.float32)
+        got = np.asarray(spmv_runner(a, fmt, x=X, batch=4, **kw)())
+        want = a.to_dense() @ X
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_batched_runner_default_x_shape(self):
+        a = _small()
+        got = np.asarray(spmv_runner(a, "sell", batch=3)())
+        assert got.shape == (a.shape[0], 3)
+
+    def test_batched_runner_rejects_shape_mismatch(self):
+        a = _small()
+        x1 = np.ones(a.shape[1], dtype=np.float32)
+        with pytest.raises(ValueError, match="batch=3 needs x of shape"):
+            spmv_runner(a, "sell", x=x1, batch=3)
+        with pytest.raises(ValueError, match="batch must be >= 1"):
+            spmv_runner(a, "sell", batch=0)
+
+    def test_measure_named_batched(self):
+        t = measure_named(_small(), "sell", batch=4, warmup=0,
+                          repeats=1)
+        assert t > 0.0
+
 
 class TestMeasuredSelect:
     def test_measure_requires_budget(self):
@@ -121,6 +158,17 @@ class TestMeasuredSelect:
         measured_rows = [r for r in dec.leaderboard if r[3] is not None]
         assert len(measured_rows) == 2
         assert measured_rows[0][3] <= measured_rows[1][3]
+
+    def test_measured_select_at_batch(self):
+        """measure=True at batch=B times the BATCHED runners (the
+        kernels serving actually runs at that pool size)."""
+        a = _small(6)
+        clear_memo()
+        dec = select(a, budget=2, measure=True, measure_warmup=0,
+                     measure_repeats=1, batch=4,
+                     cache=DecisionCache(path=None))
+        assert dec.batch == 4
+        assert dec.measured_time is not None and dec.measured_time > 0
 
     def test_measured_and_modeled_key_separately(self):
         """A measured decision must never be served for a modeled query
@@ -178,7 +226,9 @@ class TestCalibration:
 
     def test_points_and_dict_shape(self):
         res = calibrate(self._mats(), warmup=0, repeats=1)
-        assert len(res.points) == 2 * 5     # matrices x configs
+        # matrices x configs x batches (the B=1 and B=8 design rows)
+        assert len(res.points) == 2 * 5 * 2
+        assert {p.batch for p in res.points} == {1, 8}
         d = res.to_dict()
         assert set(d) == {"model", "err_before", "err_after", "points"}
         assert all(np.isfinite(p.modeled_after) for p in res.points)
@@ -193,8 +243,8 @@ class TestCalibration:
         fp = fingerprint(a)
         for cfg, width in (("sell", 32), ("sell[C=16]", 16),
                            ("sell[C=8]", 8)):
-            res = calibrate({"er": a}, configs=(cfg,), warmup=0,
-                            repeats=1)
+            res = calibrate({"er": a}, configs=(cfg,), batches=(1,),
+                            warmup=0, repeats=1)
             (p,) = res.points
             assert p.config_name == cfg
             assert p.work_elems == fp.lockstep(width)

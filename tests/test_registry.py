@@ -122,6 +122,27 @@ class TestToyFormatJoinsEverything:
         got = np.asarray(paths["registry:toy_diag"](a, x))
         np.testing.assert_allclose(got, d @ x)
 
+    def test_joins_spmm_path_discovery(self, toy_spec):
+        """A spec with only the single-vector contract still joins the
+        batched sweep: `FormatSpec.spmm_runner`'s generic per-column
+        fallback drives it (no spmm_fn override anywhere)."""
+        from test_spmv_conformance import registry_spmm_paths
+        paths = registry_spmm_paths()
+        assert "registry:toy_diag" in paths
+        d = np.diag(np.arange(1.0, 7.0))
+        a = CSR.from_dense(d)
+        X = np.arange(18.0).reshape(6, 3)
+        got = np.asarray(paths["registry:toy_diag"](a, X))
+        np.testing.assert_allclose(got, d @ X)
+
+    def test_joins_batched_timing_harness(self, toy_spec):
+        a = CSR.from_dense(np.diag(np.arange(1.0, 9.0)))
+        X = np.arange(16.0).reshape(8, 2)
+        fn = spmv_runner(a, "toy_diag", x=X, batch=2)
+        np.testing.assert_allclose(np.asarray(fn()), a.to_dense() @ X)
+        assert measure_named(a, "toy_diag", batch=2, warmup=0,
+                             repeats=1) >= 0.0
+
     def test_joins_candidate_sweep_and_select(self, toy_spec):
         a = _f32(stencil_2d(12))
         fp = fingerprint(a)
@@ -188,6 +209,66 @@ def test_select_sweeps_third_party_knob_domain():
     finally:
         unregister("toy_grouped")
         clear_memo()
+
+
+class TestKnobOverrides:
+    """The generic `knob_overrides=` parameter (ROADMAP open item):
+    narrows ANY spec's knob domain by name — third-party knobs without
+    a dedicated keyword included — on both select() and the oracle."""
+
+    def test_narrows_third_party_knob(self, toy_spec):
+        a = _f32(stencil_2d(10))
+        clear_memo()
+        dec = select(a, formats=("toy_diag",),
+                     knob_overrides={"stride": (2,)},
+                     cache=DecisionCache(path=None))
+        assert [row[0] for row in dec.leaderboard] == ["toy_diag[stride=2]"]
+        times = oracle_times(a, formats=("toy_diag",),
+                             knob_overrides={"stride": (2,)})
+        assert set(times) == {"toy_diag[stride=2]"}
+
+    def test_matches_legacy_sugar(self):
+        """knob_overrides={'group_size': ...} and the deprecated
+        group_sizes= sugar must produce identical sweeps."""
+        a = _f32(stencil_2d(12))
+        clear_memo()
+        d1 = select(a, formats=("rgcsr",), group_sizes=(8, 16),
+                    cache=DecisionCache(path=None))
+        clear_memo()
+        d2 = select(a, formats=("rgcsr",),
+                    knob_overrides={"group_size": (8, 16)},
+                    cache=DecisionCache(path=None))
+        assert d1.leaderboard == d2.leaderboard
+        assert d1.config_name == d2.config_name
+
+    def test_sugar_wins_on_conflict(self):
+        """When both spell the same knob, the explicit named keyword
+        wins (documented deprecation path)."""
+        a = _f32(stencil_2d(12))
+        clear_memo()
+        dec = select(a, formats=("rgcsr",), group_sizes=(8,),
+                     knob_overrides={"group_size": (4, 16)},
+                     cache=DecisionCache(path=None))
+        assert [row[0] for row in dec.leaderboard] == ["rgcsr[G=8]"]
+
+    def test_overrides_enter_cache_key(self):
+        a = _f32(stencil_2d(12))
+        cache = DecisionCache(path=None)
+        clear_memo()
+        select(a, formats=("rgcsr",), cache=cache)
+        select(a, formats=("rgcsr",),
+               knob_overrides={"group_size": (8,)}, cache=cache)
+        assert len(cache) == 2
+
+    def test_ignored_for_foreign_knobs(self):
+        """Overrides naming knobs a format does not declare leave that
+        format's sweep untouched (same contract as FormatSpec.knob_grid)."""
+        a = _f32(stencil_2d(12))
+        clear_memo()
+        dec = select(a, formats=("sell",),
+                     knob_overrides={"group_size": (8,)},
+                     cache=DecisionCache(path=None))
+        assert dec.config_name == "sell"
 
 
 class ToyModeSpec(ToyDiagSpec):

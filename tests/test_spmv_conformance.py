@@ -1,7 +1,9 @@
-"""Cross-kernel SpMV conformance: every SpMV path in the repo against
-dense ``A @ x`` on one shared adversarial corpus.
+"""Cross-kernel SpMV/SpMM conformance: every SpMV path in the repo
+against dense ``A @ x`` on one shared adversarial corpus, and every
+registered format's multi-RHS path against dense ``A @ X`` over a
+batch sweep.
 
-Two axes, fully parameterized:
+Axes, fully parameterized:
 
 * ``SPMV_PATHS`` — name -> callable(a: CSR, x) -> y. The hand-written
   reference paths (numpy references, the gold decode path, the pure-jnp
@@ -9,12 +11,18 @@ Two axes, fully parameterized:
   one kernel path per format in `repro.sparse.registry` — a format
   registered through the registry joins the whole corpus with ZERO
   edits to this file (asserted by tests/test_registry.py's toy spec).
+* ``SPMM_PATHS`` — the batched analogue: `registry_spmm_paths`
+  discovers one `FormatSpec.spmm` path per registered format, swept
+  over B in {1, 3, 8} x both dtypes (fused Pallas SpMM kernels where
+  the format has one, the generic per-column fallback otherwise).
 * ``CORPUS`` — name -> dense matrix builder covering the adversarial
   structure zoo: empty matrix, empty rows, one dense row among empties,
   power-law row lengths, all-equal values, plus a regular baseline.
 
 Each (path, case, dtype) triple asserts against the dense product to
-1e-5 (float32) / 1e-12 (float64) — the ISSUE's acceptance bar.
+1e-5 (float32) / 1e-12 (float64) — the ISSUE's acceptance bar. The
+``ops`` SpMM entry points are additionally pinned bit-identical to
+their SpMV siblings at B == 1.
 """
 
 import functools
@@ -122,6 +130,22 @@ def registry_spmv_paths() -> dict:
     call time so a format registered mid-session (tests) shows up."""
     return {f"registry:{spec.name}": functools.partial(_registry_path,
                                                        spec)
+            for spec in iter_formats()}
+
+
+def _registry_spmm_path(spec, a: CSR, X):
+    return np.asarray(spec.spmm(a, X, **spec.conformance_knobs)
+                      ).reshape(-1, X.shape[1])[:a.shape[0]]
+
+
+def registry_spmm_paths() -> dict:
+    """One MULTI-RHS kernel path per registered format — the batched
+    analogue of `registry_spmv_paths`. Formats with a fused SpMM
+    kernel run it; the rest run the generic per-column fallback of
+    `FormatSpec.spmm_runner`, so a third-party spec with only the
+    single-vector contract still joins the B-sweep."""
+    return {f"registry:{spec.name}": functools.partial(
+                _registry_spmm_path, spec)
             for spec in iter_formats()}
 
 
@@ -259,3 +283,114 @@ def test_spmv_conformance(dense_case, path, dtype):
     np.testing.assert_allclose(got, want, rtol=tol, atol=tol,
                                err_msg=f"{path} diverges from dense "
                                        f"A@x on corpus case {name!r}")
+
+
+# --------------------------------------------------------------------------
+# Multi-RHS (SpMM) conformance: every registered format x B x dtype.
+# --------------------------------------------------------------------------
+
+#: RHS counts swept: single vector (must match the SpMV path), an odd
+#: non-power-of-two, and a serving-pool size.
+SPMM_BATCHES = (1, 3, 8)
+
+#: Collection-time snapshot of the registry (matching SPMV_PATHS); the
+#: call-time discovery is exercised by tests/test_registry.py.
+SPMM_PATHS = registry_spmm_paths()
+
+#: Trimmed corpus for the B-sweep: the adversarial extremes (empty
+#: rows, skewed lengths) plus the regular baseline — the full corpus x
+#: batch cross-product re-tests structure handling the SpMV sweep
+#: already covers, at 3x the encode cost.
+SPMM_CASES = ("empty_rows", "powerlaw", "regular")
+
+
+@pytest.mark.parametrize("path", list(SPMM_PATHS), ids=list(SPMM_PATHS))
+@pytest.mark.parametrize("B", SPMM_BATCHES,
+                         ids=[f"B{b}" for b in SPMM_BATCHES])
+@pytest.mark.parametrize("case", SPMM_CASES, ids=SPMM_CASES)
+@pytest.mark.parametrize("dtype", [np.float32, np.float64],
+                         ids=["f32", "f64"])
+def test_spmm_conformance(case, path, B, dtype):
+    d = CORPUS[case]().astype(dtype)
+    a = CSR.from_dense(d)
+    rng = np.random.default_rng(101)
+    X = rng.standard_normal((a.shape[1], B)).astype(dtype)
+    got = np.asarray(SPMM_PATHS[path](a, X))
+    want = d @ X
+    assert got.shape == want.shape, \
+        f"{path} on {case} at B={B}: shape {got.shape} != {want.shape}"
+    tol = TOL[dtype]
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol,
+                               err_msg=f"{path} diverges from dense "
+                                       f"A@X on {case!r} at B={B}")
+
+
+#: The four fused multi-RHS ops entry points (shared y= signature),
+#: beside their single-vector siblings in OPS_ACCUMULATE.
+OPS_SPMM = {
+    "ops.spmm": (OPS_ACCUMULATE["ops.spmv"],
+                 lambda a, X, Y: ops.spmm(
+                     encode_matrix(a, lane_width=16), X, Y)),
+    "ops.sell_spmm": (OPS_ACCUMULATE["ops.sell_spmv"],
+                      lambda a, X, Y: ops.sell_spmm(
+                          pack_sell(a, lane_width=16), X, Y)),
+    "ops.rgcsr_spmm": (OPS_ACCUMULATE["ops.rgcsr_spmv"],
+                       lambda a, X, Y: ops.rgcsr_spmm(
+                           pack_rgcsr(RGCSR.from_csr(a, 8)), X, Y)),
+    "ops.bcsr_spmm": (OPS_ACCUMULATE["ops.bcsr_spmv"],
+                      lambda a, X, Y: ops.bcsr_spmm(
+                          pack_bcsr(BCSR.from_csr(a, (4, 4))), X, Y)),
+}
+
+
+@pytest.mark.parametrize("entry", list(OPS_SPMM), ids=list(OPS_SPMM))
+@pytest.mark.parametrize("dtype", [np.float32, np.float64],
+                         ids=["f32", "f64"])
+def test_ops_spmm_accumulate_y(entry, dtype):
+    """Y = A X + Y through every multi-RHS ops entry point."""
+    d = CORPUS["regular"]().astype(dtype)
+    a = CSR.from_dense(d)
+    rng = np.random.default_rng(8)
+    X = rng.standard_normal((a.shape[1], 4)).astype(dtype)
+    Y0 = rng.standard_normal((a.shape[0], 4)).astype(dtype)
+    _, spmm_fn = OPS_SPMM[entry]
+    got = np.asarray(spmm_fn(a, X, Y0))
+    tol = TOL[dtype]
+    np.testing.assert_allclose(got, d @ X + Y0, rtol=tol, atol=tol,
+                               err_msg=f"{entry} accumulate diverges")
+
+
+@pytest.mark.parametrize("entry", list(OPS_SPMM), ids=list(OPS_SPMM))
+@pytest.mark.parametrize("dtype", [np.float32, np.float64],
+                         ids=["f32", "f64"])
+def test_ops_spmm_bit_identical_at_B1(entry, dtype):
+    """The acceptance bar: spmm at B == 1 produces the same BITS as the
+    single-vector spmv entry point (it delegates to the same kernel)."""
+    d = CORPUS["powerlaw"]().astype(dtype)
+    a = CSR.from_dense(d)
+    rng = np.random.default_rng(17)
+    x = rng.standard_normal(a.shape[1]).astype(dtype)
+    spmv_fn, spmm_fn = OPS_SPMM[entry]
+    via_spmv = np.asarray(spmv_fn(a, x, None))
+    via_spmm = np.asarray(spmm_fn(a, x[:, None], None))[:, 0]
+    assert np.array_equal(via_spmv, via_spmm), \
+        f"{entry} at B=1 is not bit-identical to the spmv path"
+
+
+def test_ops_spmm_rejects_1d_rhs():
+    a = CSR.from_dense(CORPUS["regular"]())
+    x = np.ones(a.shape[1], dtype=np.float32)
+    with pytest.raises(ValueError, match="expects x of shape"):
+        ops.sell_spmm(pack_sell(a, lane_width=16), x)
+
+
+@pytest.mark.parametrize("entry", list(OPS_SPMM), ids=list(OPS_SPMM))
+def test_ops_spmm_empty_batch(entry):
+    """B == 0 (a serving pool with zero active requests) is legal and
+    returns an empty (m, 0) result instead of reaching the kernels."""
+    d = CORPUS["regular"]().astype(np.float32)
+    a = CSR.from_dense(d)
+    X = np.zeros((a.shape[1], 0), dtype=np.float32)
+    _, spmm_fn = OPS_SPMM[entry]
+    got = np.asarray(spmm_fn(a, X, None))
+    assert got.shape == (a.shape[0], 0)
