@@ -206,6 +206,33 @@ def run(small: bool = False, measure: bool = True,
                      f"{float(np.max(meas_regrets)):.4f}"))
         rows.append(("fig9meas/mean_model_err", 0.0,
                      f"{float(np.mean(model_errs)):.3f}"))
+
+    # --- obs snapshot: what the autotune/kernel instrumentation saw
+    # over this whole section (process default registry — decision-cache
+    # traffic, selector decisions by source, decode-kernel invocations,
+    # timing dispersion). These rows make the smoke JSON carry the
+    # telemetry the observability layer exists to track.
+    from repro import obs
+    snap = obs.default_registry().snapshot()
+    c, h = snap["counters"], snap["histograms"]
+    hits = c.get("autotune.decision_cache.hits", 0)
+    misses = c.get("autotune.decision_cache.misses", 0)
+    rows.append(("fig9obs/decision_cache", 0.0,
+                 f"hits={hits};misses={misses};"
+                 f"hit_rate={hits / max(hits + misses, 1):.3f}"))
+    rows.append(("fig9obs/decisions", 0.0,
+                 f"search={c.get('autotune.decisions.search', 0)};"
+                 f"cache={c.get('autotune.decisions.cache', 0)};"
+                 f"memo_hits={c.get('autotune.memo_hits', 0)}"))
+    rows.append(("fig9obs/kernels", 0.0,
+                 f"decode_invocations="
+                 f"{c.get('kernels.decode_invocations', 0)};"
+                 f"spmm_calls={c.get('kernels.spmm_calls', 0)}"))
+    tq = h.get("autotune.timing.rel_iqr", {})
+    rows.append(("fig9obs/timing", 0.0,
+                 f"timings={c.get('autotune.timings', 0)};"
+                 f"noisy={c.get('autotune.timing.noisy', 0)};"
+                 f"rel_iqr_p50={tq.get('p50', 0.0):.3f}"))
     return rows
 
 

@@ -35,7 +35,8 @@ from repro.sparse.registry import (CostTerms, FormatSpec, format_names,
 from repro.autotune.fingerprint import (Fingerprint, codeable_bits,
                                         fingerprint, lockstep_elems,
                                         max_group_nnz)
-from repro.autotune.measure import (CalibrationResult, calibrate,
+from repro.autotune.measure import (NOISY_REL_IQR, CalibrationResult,
+                                    TimingSample, calibrate,
                                     default_profiles_path, list_profiles,
                                     load_profile, measure_candidate,
                                     measure_config, measure_named,
@@ -49,7 +50,7 @@ from repro.sparse.rgcsr import RGCSR_GROUP_SIZES
 
 __all__ = [
     "ALL_FORMATS", "CalibrationResult", "Candidate", "CostTerms",
-    "Decision", "DecisionCache",
+    "Decision", "DecisionCache", "NOISY_REL_IQR", "TimingSample",
     "DTANS_LANE_WIDTHS", "Fingerprint", "FormatSpec", "MachineModel",
     "RGCSR_GROUP_SIZES", "V5E",
     "atomic_merge_json", "bcsr_config_name",

@@ -18,6 +18,8 @@ import json
 import os
 import tempfile
 
+from repro import obs
+
 _ENV_VAR = "REPRO_AUTOTUNE_CACHE"
 
 
@@ -157,9 +159,20 @@ class DecisionCache:
 
     # -- API ------------------------------------------------------------
     def get(self, key: str) -> dict | None:
-        return self._load().get(key)
+        """Lookup with hit/miss accounting: every ``get`` bumps
+        ``autotune.decision_cache.hits`` or ``.misses`` in the default
+        metrics registry, so serving runs can see whether repeated
+        selections actually short-circuit (a cold cache on every
+        process start shows up as a miss streak, not silence)."""
+        v = self._load().get(key)
+        obs.default_registry().counter(
+            "autotune.decision_cache.hits" if v is not None
+            else "autotune.decision_cache.misses").add(1)
+        return v
 
     def put(self, key: str, decision: dict) -> None:
+        obs.default_registry().counter(
+            "autotune.decision_cache.puts").add(1)
         self._load()[key] = decision
         self._persist()
 

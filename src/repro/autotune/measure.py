@@ -39,6 +39,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.autotune.cache import atomic_merge_json, default_cache_path
 from repro.autotune.cost_model import (V5E, Candidate, MachineModel,
                                        candidate_time, spmm_bytes)
@@ -59,8 +60,60 @@ _PROFILE_ENV = "REPRO_MACHINE_PROFILES"
 # --------------------------------------------------------------------------
 
 
+#: rel-IQR (IQR / median) above which a timing is flagged noisy — the
+#: threshold the calibration down-weighting and the
+#: ``autotune.timing.noisy`` counter share.
+NOISY_REL_IQR = obs.metrics.NOISY_REL_IQR
+
+
+class TimingSample(float):
+    """A median wall-clock time that also carries its dispersion.
+
+    Subclasses ``float`` (the value IS the median), so every existing
+    call site — candidate ranking, ``Decision.measured_time``, JSON
+    serialization — keeps working on the scalar, while dispersion-aware
+    consumers (calibration's down-weighting, the noisy-timing counter)
+    read ``.iqr`` / ``.min`` / ``.n`` off the same object.
+    """
+
+    __slots__ = ("iqr", "min", "n")
+
+    def __new__(cls, median: float, *, iqr: float = 0.0,
+                min: float | None = None, n: int = 1) -> "TimingSample":
+        self = float.__new__(cls, median)
+        self.iqr = float(iqr)
+        self.min = float(median if min is None else min)
+        self.n = int(n)
+        return self
+
+    @classmethod
+    def from_samples(cls, samples) -> "TimingSample":
+        xs = np.asarray(samples, dtype=np.float64)
+        if xs.size == 0:
+            raise ValueError("need at least one timing sample")
+        q25, med, q75 = np.percentile(xs, (25, 50, 75))
+        return cls(float(med), iqr=float(q75 - q25),
+                   min=float(xs.min()), n=int(xs.size))
+
+    @property
+    def median(self) -> float:
+        return float(self)
+
+    @property
+    def rel_iqr(self) -> float:
+        """IQR / median — scale-free dispersion; 0 for n == 1."""
+        m = float(self)
+        return self.iqr / m if m > 0 else 0.0
+
+    @property
+    def noisy(self) -> bool:
+        """True when the spread across repeats rivals the median itself
+        — a measurement calibration should not take at face value."""
+        return self.rel_iqr > NOISY_REL_IQR
+
+
 def time_kernel(fn, *, warmup: int = DEFAULT_WARMUP,
-                repeats: int = DEFAULT_REPEATS) -> float:
+                repeats: int = DEFAULT_REPEATS) -> TimingSample:
     """Median wall-clock seconds of ``fn()`` (a device computation).
 
     ``fn`` returns a jax array (or pytree of them); every call is fenced
@@ -68,6 +121,12 @@ def time_kernel(fn, *, warmup: int = DEFAULT_WARMUP,
     for kernel time. The first ``warmup`` calls absorb compilation and
     trace caching; the median of ``repeats`` timed calls resists
     scheduler noise better than the mean.
+
+    Returns a `TimingSample` — a float (the median; existing call sites
+    are unchanged) carrying ``iqr``, ``min`` and ``n``. Each call also
+    records the dispersion in the default metrics registry
+    (``autotune.timing.rel_iqr`` histogram; noisy timings bump
+    ``autotune.timing.noisy``).
     """
     import jax
     if repeats < 1:
@@ -79,7 +138,13 @@ def time_kernel(fn, *, warmup: int = DEFAULT_WARMUP,
         t0 = time.perf_counter()
         jax.block_until_ready(fn())
         samples.append(time.perf_counter() - t0)
-    return float(np.median(samples))
+    ts = TimingSample.from_samples(samples)
+    reg = obs.default_registry()
+    reg.counter("autotune.timings").add(1)
+    reg.histogram("autotune.timing.rel_iqr").observe(ts.rel_iqr)
+    if ts.noisy:
+        reg.counter("autotune.timing.noisy").add(1)
+    return ts
 
 
 def _default_x(a, batch: int = 1) -> np.ndarray:
@@ -141,10 +206,12 @@ def measure_config(a, fmt: str, *, params: DtansParams = PAPER,
                    interpret: bool = True,
                    warmup: int = DEFAULT_WARMUP,
                    repeats: int = DEFAULT_REPEATS,
-                   artifacts: dict | None = None, **knobs) -> float:
+                   artifacts: dict | None = None,
+                   **knobs) -> TimingSample:
     """Measured median seconds of one (format, config) SpMV — or, with
     ``batch > 1``, one multi-RHS SpMM pass — on ``a`` (``**knobs`` as
-    in `spmv_runner`)."""
+    in `spmv_runner`). Returns `time_kernel`'s `TimingSample` (a float
+    carrying dispersion)."""
     fn = spmv_runner(a, fmt, params=params, x=x, batch=batch,
                      interpret=interpret, artifacts=artifacts, **knobs)
     return time_kernel(fn, warmup=warmup, repeats=repeats)
@@ -166,7 +233,7 @@ def measure_named(a, config_name: str, *, params: DtansParams = PAPER,
                   interpret: bool = True,
                   warmup: int = DEFAULT_WARMUP,
                   repeats: int = DEFAULT_REPEATS,
-                  artifacts: dict | None = None) -> float:
+                  artifacts: dict | None = None) -> TimingSample:
     """`measure_config` addressed by canonical config name — how the
     benchmarks time the exhaustive oracle's pick."""
     return measure_config(a, **parse_config_name(config_name),
@@ -181,7 +248,7 @@ def measure_candidate(a, cand: Candidate, *, params: DtansParams = PAPER,
                       interpret: bool = True,
                       warmup: int = DEFAULT_WARMUP,
                       repeats: int = DEFAULT_REPEATS,
-                      artifacts: dict | None = None) -> float:
+                      artifacts: dict | None = None) -> TimingSample:
     """`measure_config` keyed off a cost-model `Candidate` (the
     candidate's knobs tuple carries the full configuration)."""
     return measure_config(a, cand.fmt, params=params, x=x, batch=batch,
@@ -208,6 +275,11 @@ class CalibrationPoint:
     modeled_before: float    # seconds under the base (hand-tuned) model
     modeled_after: float = float("nan")   # filled in after the fit
     batch: int = 1           # right-hand sides of the measured pass
+    # Dispersion of the measurement (`TimingSample`): IQR across the
+    # timed repeats and the weight the fit gave this row (noisy rows
+    # are down-weighted, never discarded).
+    measured_iqr: float = 0.0
+    weight: float = 1.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -319,7 +391,10 @@ def calibrate(matrices: dict | None = None, *, base: MachineModel = V5E,
     ``spmv_ops_per_elem``, ``row_seq_penalty`` and
     ``decode_ops_per_nnz`` (``vpu_rate`` and ``cache_bytes`` stay at the
     base model's datasheet values — they are not separately identifiable
-    from end-to-end times). Coefficients the data cannot pin down
+    from end-to-end times). Rows are weighted by their measurement's
+    dispersion (`TimingSample`: weight = 1 / (1 + IQR/median)), so a
+    noisy timing informs the fit less than a clean one; per-row IQR and
+    weight land in the `CalibrationPoint`. Coefficients the data cannot pin down
     positively fall back to the base model's value. The ``batches``
     sweep (default ``(1, 8)``) measures every config through both the
     single-vector and the fused multi-RHS kernel path, giving the fit
@@ -332,6 +407,7 @@ def calibrate(matrices: dict | None = None, *, base: MachineModel = V5E,
     points: list[CalibrationPoint] = []
     feats: list[list[float]] = []
     meas: list[float] = []
+    weights: list[float] = []
 
     for mname, a in mats.items():
         fp = fingerprint(a, params=params)
@@ -360,6 +436,12 @@ def calibrate(matrices: dict | None = None, *, base: MachineModel = V5E,
                     terms.decode,         # c_dec (once per pass)
                 ])
                 meas.append(t_meas)
+                # Down-weight noisy measurements (`TimingSample`
+                # dispersion): a row whose repeats disagree by its own
+                # median should not pull the fit as hard as a clean one.
+                rel = t_meas.rel_iqr if isinstance(t_meas, TimingSample) \
+                    else 0.0
+                weights.append(1.0 / (1.0 + rel))
                 t_before = candidate_time(fp, spec.name, nbytes,
                                           warm=warm, machine=base,
                                           batch=B, **knobs)
@@ -367,10 +449,13 @@ def calibrate(matrices: dict | None = None, *, base: MachineModel = V5E,
                     matrix=mname, config_name=spec.encode_knobs(knobs),
                     fmt=spec.name, nbytes=int(nbytes),
                     work_elems=int(terms.work_elems), measured=t_meas,
-                    modeled_before=t_before, batch=int(B)))
+                    modeled_before=t_before, batch=int(B),
+                    measured_iqr=float(getattr(t_meas, "iqr", 0.0)),
+                    weight=weights[-1]))
 
     A = np.asarray(feats, dtype=np.float64)
     t = np.asarray(meas, dtype=np.float64)
+    w = np.asarray(weights, dtype=np.float64)
     fallback = np.array([
         1.0 / base.hbm_bw,
         1.0 / base.cache_bw,
@@ -378,7 +463,11 @@ def calibrate(matrices: dict | None = None, *, base: MachineModel = V5E,
         base.spmv_ops_per_elem * base.row_seq_penalty / base.vpu_rate,
         base.decode_ops_per_nnz / base.vpu_rate,
     ])
-    beta = _clamped_lstsq(A, t, fallback)
+    # Weighted least squares by row scaling: minimizing
+    # sum_i w_i (A_i beta - t_i)^2 is the plain lstsq of (sqrt(w) A,
+    # sqrt(w) t). Predictions / errors below use the UNWEIGHTED rows.
+    sw = np.sqrt(w)[:, None]
+    beta = _clamped_lstsq(A * sw, t * sw[:, 0], fallback)
 
     hbm_bw = 1.0 / beta[0]
     cache_bw = max(1.0 / beta[1], hbm_bw)   # cache never slower than HBM

@@ -32,6 +32,7 @@ import dataclasses
 import hashlib
 import weakref
 
+from repro import obs
 from repro.autotune.cache import DecisionCache, default_cache
 from repro.autotune.cost_model import (V5E, Candidate, MachineModel,
                                        candidate_time, candidates,
@@ -115,6 +116,23 @@ class Decision(KnobbedConfigMixin):
             return cls(**d)
         except TypeError as e:
             raise ValueError(f"bad cached decision: {e}") from e
+
+
+def _decision_event(dec: "Decision", *, source: str) -> None:
+    """One selection outcome into the obs layer: a counter per source
+    (``search`` = computed fresh, ``cache`` = served from the
+    persistent decision cache) and — when a trace sink is configured —
+    an ``autotune.decision`` event carrying the pick with its
+    modeled-vs-measured time, so selector behaviour is inspectable from
+    a serving trace, not just benchmark regret tables."""
+    obs.default_registry().counter(
+        f"autotune.decisions.{source}").add(1)
+    obs.event("autotune.decision", source=source, fmt=dec.fmt,
+              config=dec.config_name, nbytes=dec.nbytes,
+              batch=dec.batch, warm=dec.warm, machine=dec.machine,
+              modeled_time=dec.modeled_time,
+              measured_time=(None if dec.measured_time is None
+                             else float(dec.measured_time)))
 
 
 #: id(matrix) -> (weakref-to-matrix, config key, Decision). The weakref
@@ -237,6 +255,7 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
     if use_cache:
         hit = _memo.get(id(a))
         if hit is not None and hit[0]() is a and hit[1] == cfg:
+            obs.default_registry().counter("autotune.memo_hits").add(1)
             return hit[2]
 
     fp = fingerprint(a, params=params)
@@ -264,6 +283,7 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
                 dec = None          # schema drift -> recompute
             if dec is not None:
                 _memo[id(a)] = (weakref.ref(a), cfg, dec)
+                _decision_event(dec, source="cache")
                 return dec
 
     cands = candidates(fp, machine=machine, warm=warm, params=params,
@@ -320,6 +340,7 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
             for k in [k for k, v in _memo.items() if v[0]() is None]:
                 del _memo[k]
         _memo[id(a)] = (weakref.ref(a), cfg, dec)
+    _decision_event(dec, source="search")
     return dec
 
 

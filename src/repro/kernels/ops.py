@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.csr_dtans import CSRdtANS
 from repro.kernels.bcsr_spmv import (PackedBCSR, bcsr_spmm_pallas,
                                      bcsr_spmv_pallas)
@@ -31,6 +32,38 @@ from repro.kernels.sell_spmv import (PackedSELL, sell_spmm_pallas,
                                      sell_spmv_pallas)
 
 _PACK_CACHE_FIELD = "_packed_cache"
+_OBS_NBYTES_FIELD = "_obs_nbytes"
+
+
+def _packed_nbytes(pm) -> int:
+    """Total bytes of every ndarray field of a packed artifact — the
+    matrix-side traffic one kernel pass DMAs (padded kernel-ready
+    tensors, not the compressed wire size; the kernels move whole
+    padded slices exactly like the paper's cache-line DMA). Memoized on
+    the object: the hot path must not re-walk fields per call."""
+    b = getattr(pm, _OBS_NBYTES_FIELD, None)
+    if b is None:
+        b = sum(int(v.nbytes) for v in vars(pm).values()
+                if isinstance(v, np.ndarray))
+        object.__setattr__(pm, _OBS_NBYTES_FIELD, b)
+    return b
+
+
+def _record_pass(kind: str, pm, n: int, m: int, batch: int,
+                 itemsize: int, *, decodes: bool = False) -> None:
+    """One SpMV/SpMM pass into the default metrics registry: call and
+    byte counters (matrix once per pass, x/y per RHS) plus the
+    batch-size histogram. `spmm` entry points delegate B == 1 to their
+    spmv sibling, so exactly one record happens per pass."""
+    r = obs.default_registry()
+    r.counter("kernels.spmm_calls").add(1)
+    r.counter(f"kernels.{kind}_calls").add(1)
+    if decodes:
+        r.counter("kernels.decode_invocations").add(1)
+    r.counter("kernels.matrix_bytes").add(_packed_nbytes(pm))
+    r.counter("kernels.x_bytes").add(n * batch * itemsize)
+    r.counter("kernels.y_bytes").add(m * batch * itemsize)
+    r.histogram("kernels.batch_size").observe(batch)
 
 
 def out_dtype(pm: PackedMatrix):
@@ -60,6 +93,8 @@ def spmv(mat: CSRdtANS | PackedMatrix, x, y=None, *,
     pm = get_packed(mat) if isinstance(mat, CSRdtANS) else mat
     dt = _out_dtype(pm)
     m, n = pm.shape
+    _record_pass("dtans_spmv", pm, n, m, 1, pm.dtype.itemsize,
+                 decodes=True)
     x = jnp.asarray(x, dtype=dt)
     acc = dtans_spmv_pallas(
         jnp.asarray(pm.stream), jnp.asarray(pm.esc), jnp.asarray(pm.ns),
@@ -106,6 +141,8 @@ def spmm(mat: CSRdtANS | PackedMatrix, x, y=None, *,
     if x.shape[1] == 1:
         out = spmv(pm, x[:, 0], interpret=interpret)[:, None]
     else:
+        _record_pass("dtans_spmm", pm, n, m, x.shape[1],
+                     pm.dtype.itemsize, decodes=True)
         acc = dtans_spmm_pallas(
             jnp.asarray(pm.stream), jnp.asarray(pm.esc), jnp.asarray(pm.ns),
             jnp.asarray(pm.nnz), _tabs(pm), x,
@@ -121,6 +158,7 @@ def decode(mat: CSRdtANS | PackedMatrix, *, interpret: bool = True):
     """Decompress to padded (S, L, max_nnz) (cols, vals); cols==-1 pads."""
     pm = get_packed(mat) if isinstance(mat, CSRdtANS) else mat
     dt = _out_dtype(pm)
+    obs.default_registry().counter("kernels.decode_invocations").add(1)
     return dtans_decode_pallas(
         jnp.asarray(pm.stream), jnp.asarray(pm.esc), jnp.asarray(pm.ns),
         jnp.asarray(pm.nnz), _tabs(pm),
@@ -136,6 +174,8 @@ def sell_spmv(ps: PackedSELL, x, y=None, *,
     timing harness (`repro.autotune.measure`) and the conformance suite
     drive all three entry points interchangeably."""
     m, _ = ps.shape
+    _record_pass("sell_spmv", ps, ps.shape[1], m, 1,
+                 ps.values.dtype.itemsize)
     acc = sell_spmv_pallas(jnp.asarray(ps.indices), jnp.asarray(ps.values),
                            jnp.asarray(x, dtype=ps.values.dtype),
                            interpret=interpret)
@@ -157,6 +197,8 @@ def sell_spmm(ps: PackedSELL, x, y=None, *,
     if x.shape[1] == 1:
         out = sell_spmv(ps, x[:, 0], interpret=interpret)[:, None]
     else:
+        _record_pass("sell_spmm", ps, n, m, x.shape[1],
+                     ps.values.dtype.itemsize)
         acc = sell_spmm_pallas(jnp.asarray(ps.indices),
                                jnp.asarray(ps.values), x,
                                interpret=interpret)
@@ -172,6 +214,8 @@ def rgcsr_spmv(pr: PackedRGCSR, x, y=None, *,
 
     Shares the `spmv` / `sell_spmv` signature; see `sell_spmv`."""
     m, _ = pr.shape
+    _record_pass("rgcsr_spmv", pr, pr.shape[1], m, 1,
+                 pr.values.dtype.itemsize)
     acc = rgcsr_spmv_pallas(jnp.asarray(pr.deltas), jnp.asarray(pr.values),
                             jnp.asarray(pr.nnz),
                             jnp.asarray(x, dtype=pr.values.dtype),
@@ -194,6 +238,8 @@ def rgcsr_spmm(pr: PackedRGCSR, x, y=None, *,
     if x.shape[1] == 1:
         out = rgcsr_spmv(pr, x[:, 0], interpret=interpret)[:, None]
     else:
+        _record_pass("rgcsr_spmm", pr, n, m, x.shape[1],
+                     pr.values.dtype.itemsize)
         acc = rgcsr_spmm_pallas(jnp.asarray(pr.deltas),
                                 jnp.asarray(pr.values),
                                 jnp.asarray(pr.nnz), x,
@@ -210,6 +256,8 @@ def bcsr_spmv(pb: PackedBCSR, x, y=None, *,
 
     Shares the `spmv` / `sell_spmv` signature; see `sell_spmv`."""
     m, _ = pb.shape
+    _record_pass("bcsr_spmv", pb, pb.shape[1], m, 1,
+                 pb.values.dtype.itemsize)
     acc = bcsr_spmv_pallas(jnp.asarray(pb.block_cols),
                            jnp.asarray(pb.values),
                            jnp.asarray(x, dtype=pb.values.dtype),
@@ -232,6 +280,8 @@ def bcsr_spmm(pb: PackedBCSR, x, y=None, *,
     if x.shape[1] == 1:
         out = bcsr_spmv(pb, x[:, 0], interpret=interpret)[:, None]
     else:
+        _record_pass("bcsr_spmm", pb, n, m, x.shape[1],
+                     pb.values.dtype.itemsize)
         acc = bcsr_spmm_pallas(jnp.asarray(pb.block_cols),
                                jnp.asarray(pb.values), x,
                                interpret=interpret)

@@ -20,11 +20,14 @@ per step, amortized over every active slot.
 from __future__ import annotations
 
 import dataclasses
+import time
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import api
 from repro.models.config import ArchConfig
 from repro.serving.sparse_linear import SparseLinear
@@ -37,18 +40,47 @@ class Request:
     max_new_tokens: int
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # Observability timestamps (time.perf_counter seconds): submission,
+    # first generated token (TTFT = t_first - t_submit), completion
+    # (end-to-end latency = t_done - t_submit).
+    t_submit: float | None = None
+    t_first: float | None = None
+    t_done: float | None = None
 
 
 class Engine:
     def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
                  max_seq: int = 256, sparse_head: SparseLinear | None = None,
-                 greedy: bool = True):
+                 greedy: bool = True,
+                 metrics: obs.MetricsRegistry | None = None):
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_seq = max_seq
         self.sparse_head = sparse_head
         self.greedy = greedy
+        # Metrics land in the process default registry unless the caller
+        # isolates them (benchmarks pass a fresh registry per run;
+        # `obs.NULL` serves uninstrumented — the overhead baseline).
+        self.metrics = metrics if metrics is not None \
+            else obs.default_registry()
+        m = self.metrics
+        self._m_step = m.histogram("engine.step_s")
+        self._m_prefill = m.histogram("engine.prefill_s")
+        self._m_decode = m.histogram("engine.decode_s")
+        self._m_refill = m.histogram("engine.refill_s")
+        self._m_occupancy = m.histogram("engine.occupancy")
+        self._m_ttft = m.histogram("engine.ttft_s")
+        self._m_e2e = m.histogram("engine.e2e_s")
+        self._m_tokens = m.counter("engine.tokens_total")
+        self._m_steps = m.counter("engine.steps_total")
+        self._m_submitted = m.counter("engine.requests_submitted")
+        self._m_completed = m.counter("engine.requests_completed")
+        self._m_tps = m.gauge("engine.tokens_per_sec")
+        self._m_queue = m.gauge("engine.queue_depth")
+        #: True when the last `run_until_drained` hit ``max_steps`` with
+        #: requests still active (only reachable with on_truncate="warn").
+        self.truncated = False
         self.queue: list[Request] = []
         self.active: list[Request | None] = [None] * slots
         #: Completed requests in completion order, appended by `step`
@@ -107,8 +139,11 @@ class Engine:
             self._next_rid += 1
         r = Request(rid=rid,
                     prompt=np.asarray(prompt, dtype=np.int32),
-                    max_new_tokens=max_new_tokens)
+                    max_new_tokens=max_new_tokens,
+                    t_submit=time.perf_counter())
         self.queue.append(r)
+        self._m_submitted.add(1)
+        self._m_queue.set(len(self.queue))
         return r
 
     def _fill_slots(self):
@@ -118,9 +153,14 @@ class Engine:
                 self.active[s] = r
                 # per-slot "prefill": feed prompt tokens through decode
                 # steps (slot-local; simple and exact for slot counts ~4-8)
-                for i, tok in enumerate(r.prompt[:-1]):
-                    self._step_slot(s, int(tok), i)
+                t0 = time.perf_counter()
+                with obs.span("engine.prefill", rid=r.rid,
+                              prompt_len=int(len(r.prompt))):
+                    for i, tok in enumerate(r.prompt[:-1]):
+                        self._step_slot(s, int(tok), i)
+                self._m_prefill.observe(time.perf_counter() - t0)
                 self.pos[s] = len(r.prompt) - 1
+        self._m_queue.set(len(self.queue))
 
     def _step_slot(self, s: int, tok: int, pos: int):
         toks = np.zeros((self.slots, 1), dtype=np.int32)
@@ -129,55 +169,113 @@ class Engine:
                                      jnp.asarray(toks), jnp.int32(pos))
 
     def step(self) -> int:
-        """One lock-step decode for all active slots; returns #tokens."""
-        self._fill_slots()
-        if all(r is None for r in self.active):
-            return 0
-        toks = np.zeros((self.slots, 1), dtype=np.int32)
-        for s, r in enumerate(self.active):
-            if r is not None:
-                toks[s, 0] = (r.out[-1] if r.out else r.prompt[-1])
-        # NOTE: slots share one cache_pos per step; engine keeps them in
-        # sync by construction (prefill aligns pos to the max + padding).
-        pos = int(self.pos.max())
-        if self.sparse_head is not None:
-            # hidden-state decode, then the compressed LM head: the
-            # pooled (slots, 1, d) hidden states contract against the
-            # entropy-coded head in ONE fused SpMM (decode amortized
-            # over the whole batch) — the dense in-model head is never
-            # consulted in sparse mode.
-            hidden, self.cache = self._decode_hidden(self.params,
-                                                     self.cache,
-                                                     jnp.asarray(toks),
-                                                     jnp.int32(pos))
-            logits = np.asarray(self._head(hidden), dtype=np.float32)
-        else:
-            logits, self.cache = self._decode(self.params, self.cache,
-                                              jnp.asarray(toks),
-                                              jnp.int32(pos))
-            logits = np.asarray(logits, dtype=np.float32)
-        produced = 0
-        for s, r in enumerate(self.active):
-            if r is None:
-                continue
-            nxt = int(logits[s, 0].argmax())
-            r.out.append(nxt)
-            produced += 1
-            self.pos[s] += 1
-            if len(r.out) >= r.max_new_tokens:
-                r.done = True
-                self.active[s] = None
-                self.finished.append(r)
+        """One lock-step decode for all active slots; returns #tokens.
+
+        Instrumented: step wall time splits into refill (slot
+        assignment + per-request prefill) and pooled decode spans;
+        tokens/sec, slot occupancy, TTFT and end-to-end latency land in
+        `self.metrics` (see docs/observability.md for the names).
+        """
+        t_step0 = time.perf_counter()
+        with obs.span("engine.step"):
+            with obs.span("engine.refill"):
+                self._fill_slots()
+            t_refill = time.perf_counter() - t_step0
+            n_active = sum(r is not None for r in self.active)
+            if n_active == 0:
+                return 0
+            toks = np.zeros((self.slots, 1), dtype=np.int32)
+            for s, r in enumerate(self.active):
+                if r is not None:
+                    toks[s, 0] = (r.out[-1] if r.out else r.prompt[-1])
+            # NOTE: slots share one cache_pos per step; engine keeps them
+            # in sync by construction (prefill aligns pos to the max +
+            # padding).
+            pos = int(self.pos.max())
+            t_dec0 = time.perf_counter()
+            with obs.span("engine.decode", batch=n_active,
+                          sparse=self.sparse_head is not None):
+                if self.sparse_head is not None:
+                    # hidden-state decode, then the compressed LM head:
+                    # the pooled (slots, 1, d) hidden states contract
+                    # against the entropy-coded head in ONE fused SpMM
+                    # (decode amortized over the whole batch) — the
+                    # dense in-model head is never consulted in sparse
+                    # mode.
+                    hidden, self.cache = self._decode_hidden(
+                        self.params, self.cache, jnp.asarray(toks),
+                        jnp.int32(pos))
+                    logits = np.asarray(self._head(hidden),
+                                        dtype=np.float32)
+                else:
+                    logits, self.cache = self._decode(self.params,
+                                                      self.cache,
+                                                      jnp.asarray(toks),
+                                                      jnp.int32(pos))
+                    logits = np.asarray(logits, dtype=np.float32)
+            t_decode = time.perf_counter() - t_dec0
+            now = time.perf_counter()
+            produced = 0
+            for s, r in enumerate(self.active):
+                if r is None:
+                    continue
+                nxt = int(logits[s, 0].argmax())
+                r.out.append(nxt)
+                produced += 1
+                self.pos[s] += 1
+                if len(r.out) == 1:
+                    r.t_first = now
+                    if r.t_submit is not None:
+                        self._m_ttft.observe(now - r.t_submit)
+                if len(r.out) >= r.max_new_tokens:
+                    r.done = True
+                    r.t_done = now
+                    self.active[s] = None
+                    self.finished.append(r)
+                    self._m_completed.add(1)
+                    if r.t_submit is not None:
+                        self._m_e2e.observe(now - r.t_submit)
+        dt = time.perf_counter() - t_step0
+        self._m_step.observe(dt)
+        self._m_refill.observe(t_refill)
+        self._m_decode.observe(t_decode)
+        self._m_occupancy.observe(n_active / self.slots)
+        self._m_tokens.add(produced)
+        self._m_steps.add(1)
+        self._m_tps.set(produced / dt if dt > 0 else 0.0)
         return produced
 
-    def run_until_drained(self, max_steps: int = 10000) -> list[Request]:
+    def run_until_drained(self, max_steps: int = 10000, *,
+                          on_truncate: str = "raise") -> list[Request]:
         """Step until queue and slots are empty; returns the completed
         requests in completion order (including any that finished in
         manual `step` calls before this drain and were not yet
-        reported)."""
+        reported).
+
+        Hitting ``max_steps`` with requests still queued or active used
+        to return partial results silently — a load test could report a
+        truncated run as complete. Now ``on_truncate="raise"`` (default)
+        raises RuntimeError; ``"warn"`` emits a UserWarning, sets
+        ``self.truncated`` and returns what finished.
+        """
+        if on_truncate not in ("raise", "warn"):
+            raise ValueError(f"on_truncate must be 'raise' or 'warn'; "
+                             f"got {on_truncate!r}")
+        self.truncated = False
         steps = 0
         while (self.queue or any(self.active)) and steps < max_steps:
             self.step()
             steps += 1
+        if self.queue or any(r is not None for r in self.active):
+            pending = len(self.queue) + sum(r is not None
+                                            for r in self.active)
+            msg = (f"run_until_drained hit max_steps={max_steps} with "
+                   f"{pending} request(s) still pending — results are "
+                   f"truncated")
+            self.metrics.counter("engine.drain_truncations").add(1)
+            if on_truncate == "raise":
+                raise RuntimeError(msg)
+            warnings.warn(msg, stacklevel=2)
+            self.truncated = True
         finished, self.finished = self.finished, []
         return finished

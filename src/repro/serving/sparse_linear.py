@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.csr_dtans import CSRdtANS, encode_matrix
 from repro.kernels import ops
 from repro.kernels.pack import PackedMatrix, pack_matrix
@@ -130,7 +131,13 @@ class SparseLinear:
         dt = ops.out_dtype(self.packed)
         lead = x.shape[:-1]
         xb = jnp.asarray(x, dtype=dt).reshape(-1, self.d_in)
-        y = ops.spmm(self.packed, xb.T, interpret=interpret)  # (d_out, B)
+        reg = obs.default_registry()
+        reg.counter("serving.sparse_apply_calls").add(1)
+        reg.histogram("serving.apply_batch").observe(xb.shape[0])
+        with obs.span("serving.sparse_apply", batch=int(xb.shape[0]),
+                      d_in=self.d_in, d_out=self.d_out):
+            y = ops.spmm(self.packed, xb.T,
+                         interpret=interpret)  # (d_out, B)
         return y.T.reshape(*lead, self.d_out).astype(x.dtype)
 
     def apply_dense_reference(self, x):
