@@ -49,23 +49,28 @@ def _percentiles(xs, qs=(50, 99)):
     return {f"p{q}": float(np.percentile(np.asarray(xs), q)) for q in qs}
 
 
-def _drive_poisson(eng, *, rng, n_requests: int, rate_per_s: float,
-                   prompt_len: int, max_new_tokens: int, vocab: int,
+def _drive_poisson(eng, *, rng, rate_per_s: float,
+                   prompt_lens, max_new_tokens: int, vocab: int,
                    max_steps: int):
     """Feed a seeded Poisson schedule into ``eng`` against the wall
     clock and drain it; returns the per-run report dict.
 
     Arrival times are cumulative exponential gaps drawn once up front
     (seeded — the dense and compressed runs see the *same* schedule).
-    The loop submits every request whose arrival time has passed, steps
-    the engine while it has work, and sleeps to the next arrival when
-    idle (virtual idle time still counts toward wall time, exactly like
-    a real server waiting on traffic).
+    ``prompt_lens`` gives request k a prompt of ``prompt_lens[k]``
+    tokens — a constant list is the uniform workload, a cycling
+    {1, 3, 7, 12} list is the mixed workload that exercises per-slot
+    positions and mid-flight refills. The loop submits every request
+    whose arrival time has passed, steps the engine while it has work,
+    and sleeps to the next arrival when idle (virtual idle time still
+    counts toward wall time, exactly like a real server waiting on
+    traffic).
     """
+    n_requests = len(prompt_lens)
     schedule = np.cumsum(rng.exponential(1.0 / rate_per_s,
                                          size=n_requests))
-    prompts = [rng.integers(0, vocab, size=prompt_len)
-               for _ in range(n_requests)]
+    prompts = [rng.integers(0, vocab, size=int(n))
+               for n in prompt_lens]
     reqs = []
     step_times = []
     steps = 0
@@ -104,6 +109,9 @@ def _drive_poisson(eng, *, rng, n_requests: int, rate_per_s: float,
     return {
         "requests": int(done),
         "requests_submitted": int(len(reqs)),
+        "truncations": int(snap["counters"].get(
+            "engine.drain_truncations", 0)),
+        "prompt_lens": [int(n) for n in prompt_lens],
         "tokens": int(toks),
         "wall_s": float(wall),
         "tokens_per_sec": float(toks / wall) if wall > 0 else 0.0,
@@ -235,20 +243,38 @@ def run(small: bool = False, seed: int = 0,
                       metrics=metrics if metrics is not None
                       else obs.MetricsRegistry())
 
-    results = {}
-    for label, head in (("dense", None), ("compressed", sparse_head)):
-        # Same seed => same arrival schedule and prompts for both heads.
-        rng = np.random.default_rng(seed)
+    # Mixed workload: prompt lengths cycle {1, 3, 7, 12} across the
+    # arrival schedule, so slots decode at genuinely different
+    # positions and every mid-flight refill prefills next to live
+    # requests — the workload the per-slot scheduler exists for (the
+    # uniform workload cannot distinguish per-slot positions from the
+    # old shared-position decode).
+    mixed_lens = tuple(
+        (1, 3, 7, 12) * ((n_requests + 3) // 4))[:n_requests]
+
+    def warmed_engine(head, lens):
+        """Fresh engine with every distinct prompt length jit-traced
+        (prefill retraces per length; the measured run should time
+        steady-state steps, not tracing)."""
         eng = make_engine(head=head)
-        # Warmup drain absorbs jit compilation so the measured run
-        # times steady-state steps, not tracing.
-        eng.submit(rng.integers(0, vocab, size=prompt_len), 2)
+        wrng = np.random.default_rng(seed + 7)
+        for ln in sorted(set(lens)):
+            eng.submit(wrng.integers(0, vocab, size=int(ln)), 2)
         eng.run_until_drained()
+        return eng
+
+    results = {}
+    for label, head, lens in (
+            ("dense", None, (prompt_len,) * n_requests),
+            ("compressed", sparse_head, (prompt_len,) * n_requests),
+            ("dense_mixed", None, mixed_lens),
+            ("compressed_mixed", sparse_head, mixed_lens)):
+        # Same seed => same arrival schedule and prompts for both heads.
+        eng = warmed_engine(head, lens)
         rng = np.random.default_rng(seed)
         results[label] = _drive_poisson(
-            eng, rng=rng, n_requests=n_requests, rate_per_s=rate,
-            prompt_len=prompt_len, max_new_tokens=max_new, vocab=vocab,
-            max_steps=10_000)
+            eng, rng=rng, rate_per_s=rate, prompt_lens=lens,
+            max_new_tokens=max_new, vocab=vocab, max_steps=10_000)
 
     on_s, off_s, frac, cost = _measure_overhead(
         lambda metrics: make_engine(head=sparse_head, metrics=metrics),
@@ -270,6 +296,7 @@ def run(small: bool = False, seed: int = 0,
             "seed": seed, "small": bool(small), "arch": "smollm-135m",
             "vocab": vocab, "slots": slots, "n_requests": n_requests,
             "prompt_len": prompt_len, "max_new_tokens": max_new,
+            "mixed_prompt_lens": [int(n) for n in mixed_lens],
             "arrival_rate_per_s": rate,
             "sparsity": 0.8,
             "head_compression_vs_dense":
@@ -284,7 +311,8 @@ def run(small: bool = False, seed: int = 0,
             json.dump(doc, f, indent=1, sort_keys=True)
 
     rows = []
-    for label in ("dense", "compressed"):
+    for label in ("dense", "compressed", "dense_mixed",
+                  "compressed_mixed"):
         r = results[label]
         rows.append((
             f"load/{label}", r["mean_step_s"] * 1e6,

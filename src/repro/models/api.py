@@ -7,6 +7,14 @@
   decode_step(params, cfg, cache, tok, pos) -> (logits, cache)
   decode_hidden(params, cfg, cache, tok, pos) -> (hidden, cache)
   make_decode_cache(cfg, batch_size, seq)   -> cache pytree
+  cache_insert_slot(cfg, pool, req, slot)   -> pool cache pytree
+
+``pos`` in the decode entry points is either a () scalar (every batch
+row decodes at the same position — the classic lock-step call) or a
+(B,) int32 vector of *per-slot* positions: row b writes its KV at
+``pos[b]`` and attends keys ``<= pos[b]``; entry ``-1`` marks an
+inactive slot whose cache lines (KV, SSM state, conv tail) pass
+through unmodified.
 """
 
 from __future__ import annotations
@@ -91,6 +99,16 @@ def make_decode_cache(cfg: ArchConfig, batch_size: int, seq_len: int,
                       dtype=None):
     return _mod(cfg).make_decode_cache(cfg, batch_size, seq_len,
                                        dtype=dtype)
+
+
+def cache_insert_slot(cfg: ArchConfig, pool, req, slot: int):
+    """Insert a batch-size-1 decode cache ``req`` (e.g. returned by
+    `prefill(..., max_seq=<pool seq len>)`) into batch slot ``slot`` of
+    the pooled decode cache ``pool``. Every cache line of the slot is
+    overwritten — the serving engine uses this to admit a freshly
+    prefilled request into a slot whose previous occupant finished,
+    without leaking the old request's KV/SSM state."""
+    return _mod(cfg).cache_insert_slot(cfg, pool, req, slot)
 
 
 def param_count(params) -> int:

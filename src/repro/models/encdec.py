@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from repro.models.config import ArchConfig
 from repro.models.layers import (attention, attention_init, embed,
                                  embedding_init, lm_head, mlp, mlp_init,
-                                 rmsnorm, rmsnorm_init)
+                                 pos_vector, rmsnorm, rmsnorm_init)
 from repro.models.sharding import shard
 
 DEC_PREFILL_LEN = 1024
@@ -137,10 +137,13 @@ def prefill(params, cfg: ArchConfig, batch, max_seq=None):
 def decode_hidden(params, cfg: ArchConfig, caches, token, pos):
     """One decoder step up to the final norm — the hidden states the
     LM head (dense or sparse) consumes; `decode_step` == lm_head of
-    this (same contract as `transformer.decode_hidden`)."""
+    this (same contract as `transformer.decode_hidden`). ``pos`` may be
+    () or (B,) per-slot positions (-1 = inactive slot, KV write
+    masked)."""
     x = embed(params["embed"], token)
     B = token.shape[0]
-    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    pos = pos_vector(pos, B)          # (B,); -1 marks an inactive slot
+    positions = pos[:, None]
     memory = caches["memory"]
 
     def body(x, inp):
@@ -157,6 +160,21 @@ def decode_hidden(params, cfg: ArchConfig, caches, token, pos):
 def decode_step(params, cfg: ArchConfig, caches, token, pos):
     x, new_caches = decode_hidden(params, cfg, caches, token, pos)
     return lm_head(params["embed"], x), new_caches
+
+
+def cache_insert_slot(cfg: ArchConfig, pool, req, slot: int):
+    """Insert a batch-size-1 decode cache (from `prefill`) into batch
+    slot ``slot``: decoder self-attention KV carries the batch on axis 1
+    (layer-stacked), the encoder memory on axis 0."""
+    return {
+        "kv": jax.tree.map(
+            lambda p, r: jax.lax.dynamic_update_slice_in_dim(
+                p, r.astype(p.dtype), slot, axis=1),
+            pool["kv"], req["kv"]),
+        "memory": jax.lax.dynamic_update_slice_in_dim(
+            pool["memory"], req["memory"].astype(pool["memory"].dtype),
+            slot, axis=0),
+    }
 
 
 def make_decode_cache(cfg: ArchConfig, batch, seq_len, memory_len=None,

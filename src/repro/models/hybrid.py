@@ -18,8 +18,8 @@ import jax.numpy as jnp
 from repro.models.config import ArchConfig
 from repro.models.layers import (attention, attention_init, embed,
                                  embedding_init, lm_head, matmul, mlp,
-                                 mlp_init, rmsnorm, rmsnorm_init,
-                                 _dense_init)
+                                 mlp_init, pos_vector, rmsnorm,
+                                 rmsnorm_init, _dense_init)
 from repro.models.sharding import shard
 from repro.models.ssm import ssm_block, ssm_cache_init, ssm_init
 
@@ -191,12 +191,16 @@ def make_decode_cache(cfg: ArchConfig, batch, seq_len, dtype=None):
 def decode_hidden(params, cfg: ArchConfig, caches, token, pos):
     """One serving step up to the final norm — the hidden states the
     LM head (dense or sparse) consumes; `decode_step` == lm_head of
-    this (same contract as `transformer.decode_hidden`)."""
+    this (same contract as `transformer.decode_hidden`). ``pos`` may be
+    a () scalar (all slots in lock step) or a (B,) vector of per-slot
+    positions; entries of -1 mark inactive slots, whose SSM state, conv
+    tail and attention KV lines all pass through unmodified."""
     every, n_groups, n_tail = _plan(cfg)
     x = embed(params["embed"], token)
     B = token.shape[0]
+    pos = pos_vector(pos, B)          # (B,); -1 marks an inactive slot
     x0 = x
-    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    positions = pos[:, None]
     shared = params.get("shared_attn")
 
     def inner(x, inp):
@@ -235,6 +239,15 @@ def decode_hidden(params, cfg: ArchConfig, caches, token, pos):
     if n_tail:
         parts.append(new_tail)
     new_ssm = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+    # Inactive-slot write mask: the single-token SSM recurrence advances
+    # state and conv tail for every batch row unconditionally — a pooled
+    # step must not corrupt the state of slots that are not decoding
+    # (attention KV already masks its own write inside `attention`).
+    active = pos >= 0
+    new_ssm = jax.tree.map(
+        lambda new, old: jnp.where(
+            active.reshape((1, -1) + (1,) * (new.ndim - 2)), new, old),
+        new_ssm, ssm_caches)
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     new_caches = {"ssm": new_ssm, "x0": caches["x0"]}
     if new_attn is not None:
@@ -245,3 +258,20 @@ def decode_hidden(params, cfg: ArchConfig, caches, token, pos):
 def decode_step(params, cfg: ArchConfig, caches, token, pos):
     x, new_caches = decode_hidden(params, cfg, caches, token, pos)
     return lm_head(params["embed"], x), new_caches
+
+
+def cache_insert_slot(cfg: ArchConfig, pool, req, slot: int):
+    """Insert a batch-size-1 decode cache (from `prefill`) into batch
+    slot ``slot`` of a pooled cache. SSM states and attention KV carry
+    the batch on axis 1 (layer/group-stacked); the pass-through ``x0``
+    buffer on axis 0. Every cache line of the slot is overwritten —
+    stale SSM state from the slot's previous occupant cannot leak."""
+    def ins(axis):
+        return lambda p, r: jax.lax.dynamic_update_slice_in_dim(
+            p, r.astype(p.dtype), slot, axis=axis)
+
+    out = {"ssm": jax.tree.map(ins(1), pool["ssm"], req["ssm"]),
+           "x0": ins(0)(pool["x0"], req["x0"])}
+    if "attn" in pool:
+        out["attn"] = jax.tree.map(ins(1), pool["attn"], req["attn"])
+    return out

@@ -57,6 +57,19 @@ def rope(x, positions, theta):
     return out.astype(x.dtype)
 
 
+def pos_vector(pos, batch: int):
+    """Normalize a decode position to a per-slot (B,) int32 vector.
+
+    Scalar positions (the classic all-slots-in-lock-step call) broadcast
+    to every batch row; a (B,) vector passes through. Convention shared
+    by every family backend: entry ``-1`` marks an *inactive* slot —
+    attention skips its cache write and masks out every key, and the
+    SSM recurrence keeps its previous state.
+    """
+    p = jnp.asarray(pos, dtype=jnp.int32)
+    return jnp.broadcast_to(p, (batch,)) if p.ndim == 0 else p
+
+
 # --- GQA attention ------------------------------------------------------------
 
 def attention_init(cfg: ArchConfig, rng, d=None, n_heads=None,
@@ -90,8 +103,14 @@ def attention(p, cfg: ArchConfig, x, positions, *, causal=True,
     """GQA attention.
 
     x: (B, S, d). kv: optional cross-attention memory (B, Sk, d).
-    kv_cache: optional dict {k, v: (B, Smax, Hk, hd)}; cache_pos: () int —
-    write position for the current step; returns (out, new_cache).
+    kv_cache: optional dict {k, v: (B, Smax, Hk, hd)}; cache_pos: () int
+    or (B,) int32 — write position for the current step; returns
+    (out, new_cache). A (B,) cache_pos serves batch slots holding
+    requests of unequal length: slot b writes its K/V row at
+    ``cache_pos[b]`` and attends keys ``<= cache_pos[b]`` only, and a
+    *negative* position marks an inactive slot — it matches no cache
+    row, so the write is masked out entirely (the slot's live cache
+    lines survive pooled steps it does not participate in).
     return_cache=True (prefill): return this call's {k, v} as the cache.
     """
     H = n_heads or cfg.n_heads
@@ -106,20 +125,38 @@ def attention(p, cfg: ArchConfig, x, positions, *, causal=True,
     k = shard(k, "batch", "seq", "kv_heads", None)
     v = shard(v, "batch", "seq", "kv_heads", None)
 
+    cp = None if cache_pos is None \
+        else jnp.asarray(cache_pos, dtype=jnp.int32)
     if kv is None:  # self-attention: rotary embedding
+        if kv_cache is None:
+            kpos = positions
+        else:
+            kpos = jnp.broadcast_to(cp[:, None] if cp.ndim else cp,
+                                    (B, src.shape[1]))
         q = rope(q, positions, cfg.rope_theta)
-        k = rope(k, (positions if kv_cache is None
-                     else jnp.full((B, src.shape[1]), cache_pos,
-                                   dtype=jnp.int32)), cfg.rope_theta)
+        k = rope(k, kpos, cfg.rope_theta)
 
     new_cache = {"k": k, "v": v} if return_cache else None
     if kv_cache is not None:
-        z = jnp.int32(0)
-        idx = (z, jnp.asarray(cache_pos, dtype=jnp.int32), z, z)
-        ck = jax.lax.dynamic_update_slice(kv_cache["k"], k.astype(
-            kv_cache["k"].dtype), idx)
-        cv = jax.lax.dynamic_update_slice(kv_cache["v"], v.astype(
-            kv_cache["v"].dtype), idx)
+        if cp.ndim == 0:
+            z = jnp.int32(0)
+            idx = (z, cp, z, z)
+            ck = jax.lax.dynamic_update_slice(kv_cache["k"], k.astype(
+                kv_cache["k"].dtype), idx)
+            cv = jax.lax.dynamic_update_slice(kv_cache["v"], v.astype(
+                kv_cache["v"].dtype), idx)
+        else:
+            # Per-slot scatter (S == 1 decode): slot b writes at its own
+            # position cp[b]; a negative cp[b] (inactive slot) matches no
+            # cache row — the write is fully masked and the slot's cache
+            # lines pass through untouched.
+            Smax = kv_cache["k"].shape[1]
+            hit = (jnp.arange(Smax, dtype=jnp.int32)[None, :]
+                   == cp[:, None])[:, :, None, None]
+            ck = jnp.where(hit, k.astype(kv_cache["k"].dtype),
+                           kv_cache["k"])
+            cv = jnp.where(hit, v.astype(kv_cache["v"].dtype),
+                           kv_cache["v"])
         new_cache = {"k": ck, "v": cv}
         k, v = ck, cv
 
@@ -136,7 +173,12 @@ def attention(p, cfg: ArchConfig, x, positions, *, causal=True,
         logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k,
                             preferred_element_type=jnp.float32) * scale
         kpos_ids = jnp.arange(Sk, dtype=jnp.int32)
-        mask = (kpos_ids <= cache_pos)[None, None, None, None, :]
+        if cp.ndim == 0:
+            mask = (kpos_ids <= cp)[None, None, None, None, :]
+        else:
+            # per-slot causal horizon: slot b attends keys <= cp[b] only
+            mask = (kpos_ids[None, :]
+                    <= cp[:, None])[:, None, None, None, :]
         logits = jnp.where(mask, logits, -1e30)
         probs = jax.nn.softmax(logits, axis=-1)
         out = jnp.einsum("bgrqk,bkgd->bqgrd", probs.astype(x.dtype), v,

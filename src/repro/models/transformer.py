@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from repro.models.config import ArchConfig
 from repro.models.layers import (attention, attention_init, embed,
                                  embedding_init, lm_head, mlp, mlp_init,
-                                 rmsnorm, rmsnorm_init)
+                                 pos_vector, rmsnorm, rmsnorm_init)
 from repro.models.moe import moe, moe_init
 from repro.models.sharding import shard
 
@@ -120,7 +120,8 @@ def decode_hidden(params, cfg: ArchConfig, caches, token, pos):
     directly when the output projection is sparse."""
     x = embed(params["embed"], token)
     B = token.shape[0]
-    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    pos = pos_vector(pos, B)          # (B,); -1 marks an inactive slot
+    positions = pos[:, None]
 
     def body(x, inp):
         layer_p, cache = inp
@@ -135,9 +136,22 @@ def decode_hidden(params, cfg: ArchConfig, caches, token, pos):
 
 def decode_step(params, cfg: ArchConfig, caches, token, pos):
     """One serving step: token (B, 1) int32, pos () int32 — the write
-    position (number of tokens already in the cache)."""
+    position (number of tokens already in the cache) — or (B,) int32
+    per-slot write positions (entry -1 = inactive slot, no cache
+    write)."""
     x, new_caches = decode_hidden(params, cfg, caches, token, pos)
     return lm_head(params["embed"], x), new_caches
+
+
+def cache_insert_slot(cfg: ArchConfig, pool, req, slot: int):
+    """Insert a single-request decode cache (batch size 1 — e.g. the
+    cache `prefill(..., max_seq=pool length)` returns) into batch slot
+    ``slot`` of a pooled decode cache. The slot's whole cache line is
+    overwritten, so stale K/V from the slot's previous occupant cannot
+    leak into the new request."""
+    return jax.tree.map(
+        lambda p, r: jax.lax.dynamic_update_slice_in_dim(
+            p, r.astype(p.dtype), slot, axis=1), pool, req)
 
 
 def make_decode_cache(cfg: ArchConfig, batch, seq_len, dtype=None):

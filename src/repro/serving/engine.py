@@ -1,11 +1,25 @@
-"""Batched serving engine with continuous batching-lite and optional
-dtANS-sparse projection weights.
+"""Batched serving engine: per-slot continuous batching with batched
+prefill and optional dtANS-sparse projection weights.
 
-A fixed pool of batch slots is filled from a request queue; prefill runs
-per-request (padded to the slot length), decode steps run for the whole
-pool in lock step. Slots whose request finishes are refilled immediately —
-the decode batch never drains (the paper's memory-bound SpMVM regime is
-per-token decode, where weight bytes dominate).
+A fixed pool of batch slots is filled FIFO from a bounded request
+queue. Each slot tracks its own cache position (`Engine.pos[s]`;
+``-1`` = empty slot), so requests with unequal prompt lengths decode
+together — slot s reads and writes KV at exactly ``pos[s]``, never at
+another slot's position. Admitting a request runs its whole prompt
+through ONE batched forward (`api.prefill`) and scatters the resulting
+batch-size-1 cache into the slot (`api.cache_insert_slot`); the other
+slots' live cache lines are untouched (the old token-by-token replay
+fed zero tokens through every slot and corrupted their KV on each
+mid-flight refill). Admission control rejects requests the pool could
+never serve correctly — empty prompts and
+``prompt_len + max_new_tokens > max_seq`` — at `submit` time, which
+makes a slot position walking past ``max_seq`` unreachable.
+
+Sampling: ``greedy=True`` (default) takes the argmax;
+``greedy=False`` samples from the temperature-scaled softmax,
+optionally truncated to the ``top_k`` most likely tokens, with a
+seeded per-engine generator (two engines with the same ``sample_seed``
+reproduce the same stream).
 
 Sparse mode: `compress_lm_head` swaps the output projection for a
 SparseLinear (pruned + entropy-coded). The LM head is the single largest
@@ -33,6 +47,14 @@ from repro.models.config import ArchConfig
 from repro.serving.sparse_linear import SparseLinear
 
 
+class AdmissionError(ValueError):
+    """Request rejected by admission control at `Engine.submit`."""
+
+
+class QueueFullError(AdmissionError):
+    """Request rejected because the FIFO queue is at ``max_queue``."""
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -51,7 +73,9 @@ class Request:
 class Engine:
     def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
                  max_seq: int = 256, sparse_head: SparseLinear | None = None,
-                 greedy: bool = True,
+                 greedy: bool = True, temperature: float = 1.0,
+                 top_k: int = 0, sample_seed: int = 0,
+                 max_queue: int | None = None,
                  metrics: obs.MetricsRegistry | None = None):
         self.cfg = cfg
         self.params = params
@@ -59,6 +83,10 @@ class Engine:
         self.max_seq = max_seq
         self.sparse_head = sparse_head
         self.greedy = greedy
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+        self._sampler = np.random.default_rng(sample_seed)
+        self.max_queue = max_queue
         # Metrics land in the process default registry unless the caller
         # isolates them (benchmarks pass a fresh registry per run;
         # `obs.NULL` serves uninstrumented — the overhead baseline).
@@ -76,8 +104,12 @@ class Engine:
         self._m_steps = m.counter("engine.steps_total")
         self._m_submitted = m.counter("engine.requests_submitted")
         self._m_completed = m.counter("engine.requests_completed")
+        self._m_rejected = m.counter("engine.rejections")
+        self._m_refills = m.counter("engine.refills_total")
         self._m_tps = m.gauge("engine.tokens_per_sec")
         self._m_queue = m.gauge("engine.queue_depth")
+        self._m_slot_pos = [m.gauge(f"engine.slot_pos.{s}")
+                            for s in range(slots)]
         #: True when the last `run_until_drained` hit ``max_steps`` with
         #: requests still active (only reachable with on_truncate="warn").
         self.truncated = False
@@ -90,9 +122,17 @@ class Engine:
         # soon as submits interleaved with steps (queue drains), making
         # drained results ambiguous to correlate.
         self._next_rid = 0
-        self.pos = np.zeros(slots, dtype=np.int32)
+        #: Per-slot cache position: the index the slot's NEXT decode
+        #: step writes KV at. -1 = empty slot (backends mask its cache
+        #: writes and attention entirely).
+        self.pos = np.full(slots, -1, dtype=np.int32)
         self.cache = api.make_decode_cache(cfg, slots, max_seq,
                                            dtype=jnp.float32)
+        # A zeroed batch-size-1 cache, scattered into a slot on admission
+        # of a 1-token prompt (no prefill runs, but the slot's stale
+        # state from its previous occupant must still be cleared).
+        self._blank_slot = api.make_decode_cache(cfg, 1, max_seq,
+                                                 dtype=jnp.float32)
         self._decode = jax.jit(
             lambda p, c, t, pos: api.decode_step(p, cfg, c, t, pos))
         # Sparse mode stops the jit'd step at the hidden states; the
@@ -101,6 +141,11 @@ class Engine:
         # over every active slot).
         self._decode_hidden = jax.jit(
             lambda p, c, t, pos: api.decode_hidden(p, cfg, c, t, pos))
+        # Batched prefill: the whole prompt in one forward pass. jit
+        # retraces once per distinct prompt length (real engines bucket
+        # lengths; the pools this repo serves see a handful).
+        self._prefill = jax.jit(
+            lambda p, b: api.prefill(p, cfg, b, max_seq=max_seq))
 
     # --- sparse head ---------------------------------------------------------
     @classmethod
@@ -127,18 +172,59 @@ class Engine:
     def _head(self, hidden):
         """hidden: (B, 1, d) -> logits (B, 1, vocab) through the
         compressed head's fused SpMM path (`SparseLinear.apply` ->
-        `ops.spmm`: decode once, contract all B pooled hidden states)."""
+        `ops.spmm`: decode once, contract all B pooled hidden states).
+        The engine's own registry is threaded through so head metrics
+        stay isolated with the engine's (`metrics=` contract)."""
         if self.sparse_head is None:
             raise RuntimeError("dense path returns logits directly")
-        return self.sparse_head.apply(hidden)
+        return self.sparse_head.apply(hidden, metrics=self.metrics)
 
-    # --- request lifecycle ----------------------------------------------------
+    # --- scheduler: admission control ----------------------------------------
+    def _reject(self, reason: str, msg: str):
+        self._m_rejected.add(1)
+        self.metrics.counter(f"engine.rejections.{reason}").add(1)
+        if reason == "queue_full":
+            raise QueueFullError(msg)
+        raise AdmissionError(msg)
+
     def submit(self, prompt, max_new_tokens: int, rid=None) -> Request:
+        """Admit a request into the FIFO queue, or raise
+        `AdmissionError` / `QueueFullError`.
+
+        Admission rules (each rejection bumps ``engine.rejections`` and
+        ``engine.rejections.<reason>``):
+
+        * non-empty prompt — an empty prompt has no last token to feed
+          the first decode step (used to crash deep inside `step`);
+        * ``max_new_tokens >= 1``;
+        * ``prompt_len + max_new_tokens <= max_seq`` — the request's
+          final decode position is then ``prompt_len + max_new - 2 <=
+          max_seq - 2``, so a slot position can never walk past the
+          cache (used to scatter KV out of range);
+        * queue depth below ``max_queue`` (when set).
+        """
+        prompt = np.asarray(prompt, dtype=np.int32).reshape(-1)
+        if prompt.size == 0:
+            self._reject("empty_prompt", "empty prompt rejected: the "
+                         "first decode step feeds prompt[-1]")
+        if max_new_tokens < 1:
+            self._reject("bad_max_new",
+                         f"max_new_tokens must be >= 1; "
+                         f"got {max_new_tokens}")
+        if len(prompt) + max_new_tokens > self.max_seq:
+            self._reject(
+                "exceeds_max_seq",
+                f"prompt_len + max_new_tokens = "
+                f"{len(prompt)} + {max_new_tokens} > max_seq="
+                f"{self.max_seq}: request would overrun the KV cache")
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            self._reject("queue_full",
+                         f"queue at max_queue={self.max_queue}")
         if rid is None:
             rid = self._next_rid
             self._next_rid += 1
         r = Request(rid=rid,
-                    prompt=np.asarray(prompt, dtype=np.int32),
+                    prompt=prompt,
                     max_new_tokens=max_new_tokens,
                     t_submit=time.perf_counter())
         self.queue.append(r)
@@ -146,35 +232,76 @@ class Engine:
         self._m_queue.set(len(self.queue))
         return r
 
+    # --- scheduler: refill + batched prefill ----------------------------------
     def _fill_slots(self):
         for s in range(self.slots):
             if self.active[s] is None and self.queue:
                 r = self.queue.pop(0)
                 self.active[s] = r
-                # per-slot "prefill": feed prompt tokens through decode
-                # steps (slot-local; simple and exact for slot counts ~4-8)
                 t0 = time.perf_counter()
-                with obs.span("engine.prefill", rid=r.rid,
+                with obs.span("engine.prefill", rid=r.rid, slot=s,
                               prompt_len=int(len(r.prompt))):
-                    for i, tok in enumerate(r.prompt[:-1]):
-                        self._step_slot(s, int(tok), i)
+                    self._prefill_slot(s, r)
                 self._m_prefill.observe(time.perf_counter() - t0)
-                self.pos[s] = len(r.prompt) - 1
+                self._m_refills.add(1)
         self._m_queue.set(len(self.queue))
+        for s, g in enumerate(self._m_slot_pos):
+            g.set(int(self.pos[s]))
 
-    def _step_slot(self, s: int, tok: int, pos: int):
-        toks = np.zeros((self.slots, 1), dtype=np.int32)
-        toks[s, 0] = tok
-        _, self.cache = self._decode(self.params, self.cache,
-                                     jnp.asarray(toks), jnp.int32(pos))
+    def _prefill_slot(self, s: int, r: Request):
+        """Admit request ``r`` into slot ``s``: run ``prompt[:-1]``
+        through ONE batched `api.prefill` forward and scatter the
+        resulting cache into the slot (the last prompt token is fed by
+        the first pooled decode step, which produces the first output
+        token). Slots other than ``s`` are untouched — no cross-slot
+        KV writes, unlike the old per-token replay that fed zero
+        tokens through every other slot."""
+        L = len(r.prompt)
+        if L > 1:
+            batch = {"inputs": jnp.asarray(r.prompt[None, :-1])}
+            if self.cfg.family == "encdec":
+                # No frame frontend flows through `submit`; a zero
+                # frame block matches the zero `memory` the pooled
+                # decode cache initializes (encode(0) == 0 end to end).
+                batch["frontend"] = jnp.zeros(
+                    (1, self.cfg.n_frontend_tokens, self.cfg.d_model),
+                    dtype=jnp.float32)
+            _, req_cache, _ = self._prefill(self.params, batch)
+        else:
+            # 1-token prompt: nothing to prefill, but the slot's cache
+            # lines still hold its previous occupant's state.
+            req_cache = self._blank_slot
+        self.cache = api.cache_insert_slot(self.cfg, self.cache,
+                                           req_cache, s)
+        self.pos[s] = L - 1
 
+    # --- sampling --------------------------------------------------------------
+    def _select_token(self, logits_row: np.ndarray) -> int:
+        """Next token from one slot's (vocab,) logits: argmax when
+        ``greedy``, else seeded temperature/top-k sampling."""
+        if self.greedy:
+            return int(logits_row.argmax())
+        z = logits_row.astype(np.float64) / max(self.temperature, 1e-6)
+        if self.top_k and self.top_k < z.size:
+            kth = np.partition(z, -self.top_k)[-self.top_k]
+            z = np.where(z >= kth, z, -np.inf)
+        z = z - z.max()
+        p = np.exp(z)
+        p /= p.sum()
+        return int(self._sampler.choice(z.size, p=p))
+
+    # --- decode ----------------------------------------------------------------
     def step(self) -> int:
-        """One lock-step decode for all active slots; returns #tokens.
+        """One pooled decode for all active slots; returns #tokens.
 
-        Instrumented: step wall time splits into refill (slot
-        assignment + per-request prefill) and pooled decode spans;
-        tokens/sec, slot occupancy, TTFT and end-to-end latency land in
-        `self.metrics` (see docs/observability.md for the names).
+        Each slot decodes at ITS OWN position (`self.pos`, a (slots,)
+        vector threaded through `api.decode_step` / `decode_hidden`):
+        mixed-length prompts and mid-flight refills stay token-identical
+        to running each request alone. Instrumented: step wall time
+        splits into refill (admission + batched prefill) and pooled
+        decode spans; tokens/sec, slot occupancy, per-slot position
+        gauges, TTFT and end-to-end latency land in `self.metrics`
+        (see docs/observability.md for the names).
         """
         t_step0 = time.perf_counter()
         with obs.span("engine.step"):
@@ -188,10 +315,9 @@ class Engine:
             for s, r in enumerate(self.active):
                 if r is not None:
                     toks[s, 0] = (r.out[-1] if r.out else r.prompt[-1])
-            # NOTE: slots share one cache_pos per step; engine keeps them
-            # in sync by construction (prefill aligns pos to the max +
-            # padding).
-            pos = int(self.pos.max())
+            # Per-slot positions: empty slots carry -1 and are fully
+            # masked inside the model (no KV/SSM writes, no attention).
+            pos = jnp.asarray(self.pos)
             t_dec0 = time.perf_counter()
             with obs.span("engine.decode", batch=n_active,
                           sparse=self.sparse_head is not None):
@@ -203,15 +329,14 @@ class Engine:
                     # dense in-model head is never consulted in sparse
                     # mode.
                     hidden, self.cache = self._decode_hidden(
-                        self.params, self.cache, jnp.asarray(toks),
-                        jnp.int32(pos))
+                        self.params, self.cache, jnp.asarray(toks), pos)
                     logits = np.asarray(self._head(hidden),
                                         dtype=np.float32)
                 else:
                     logits, self.cache = self._decode(self.params,
                                                       self.cache,
                                                       jnp.asarray(toks),
-                                                      jnp.int32(pos))
+                                                      pos)
                     logits = np.asarray(logits, dtype=np.float32)
             t_decode = time.perf_counter() - t_dec0
             now = time.perf_counter()
@@ -219,10 +344,17 @@ class Engine:
             for s, r in enumerate(self.active):
                 if r is None:
                     continue
-                nxt = int(logits[s, 0].argmax())
+                nxt = self._select_token(logits[s, 0])
                 r.out.append(nxt)
                 produced += 1
                 self.pos[s] += 1
+                if self.pos[s] >= self.max_seq:
+                    # Unreachable by construction: admission control
+                    # bounds prompt_len + max_new_tokens <= max_seq.
+                    raise RuntimeError(
+                        f"slot {s} position {int(self.pos[s])} overran "
+                        f"max_seq={self.max_seq} — admission control "
+                        f"failed")
                 if len(r.out) == 1:
                     r.t_first = now
                     if r.t_submit is not None:
@@ -231,10 +363,13 @@ class Engine:
                     r.done = True
                     r.t_done = now
                     self.active[s] = None
+                    self.pos[s] = -1
                     self.finished.append(r)
                     self._m_completed.add(1)
                     if r.t_submit is not None:
                         self._m_e2e.observe(now - r.t_submit)
+            for s, g in enumerate(self._m_slot_pos):
+                g.set(int(self.pos[s]))
         dt = time.perf_counter() - t_step0
         self._m_step.observe(dt)
         self._m_refill.observe(t_refill)

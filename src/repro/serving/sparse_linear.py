@@ -117,7 +117,8 @@ class SparseLinear:
     def compression_vs_best_sparse(self) -> float:
         return self.baseline_bytes / self.mat.nbytes
 
-    def apply(self, x, *, interpret: bool = True):
+    def apply(self, x, *, interpret: bool = True,
+              metrics: obs.MetricsRegistry | None = None):
         """x: (..., d_in) -> (..., d_out).
 
         Every batch size routes through the fused Pallas SpMM kernel
@@ -127,11 +128,17 @@ class SparseLinear:
         single-vector kernel and is bit-identical to `ops.spmv`).
         Accumulation happens in the packed matrix's dtype
         (`ops.out_dtype`) — a float64 weight contracts in float64.
+
+        ``metrics``: registry the ``serving.*`` instruments land in
+        (the process default when omitted). Callers that isolate their
+        instrumentation — `Engine(metrics=...)` threads its own
+        registry through — keep dense-vs-compressed benchmark runs from
+        cross-contaminating each other's ``serving.*`` numbers.
         """
         dt = ops.out_dtype(self.packed)
         lead = x.shape[:-1]
         xb = jnp.asarray(x, dtype=dt).reshape(-1, self.d_in)
-        reg = obs.default_registry()
+        reg = metrics if metrics is not None else obs.default_registry()
         reg.counter("serving.sparse_apply_calls").add(1)
         reg.histogram("serving.apply_batch").observe(xb.shape[0])
         with obs.span("serving.sparse_apply", batch=int(xb.shape[0]),
