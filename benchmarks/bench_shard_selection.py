@@ -1,0 +1,124 @@
+"""Sharded-selection benchmark: selector-vs-oracle regret per shard
+count, plus the mesh sweep that lets the argmin decide how many chips
+each matrix wants.
+
+The sharding layer reprices every candidate for k-device execution:
+the critical-path device holds ~1/k of the matrix bytes and does 1/k
+of the decode and contraction work, then pays the x-broadcast/y-reduce
+collective (`repro.autotune.cost_model.collective_time`).  This
+section sweeps ``select(n_shards=k)`` against the exhaustive
+exact-size oracle priced at the same k and reports
+
+  * per (matrix, k): the selector's pick, the oracle's pick, and the
+    modeled regret (both sides share `candidate_time(n_shards=k)`, so
+    regret 0 means genuine agreement at that shard count — the CI
+    shard-smoke leg asserts exactly this at k in {1, 4});
+  * per matrix: the ``select(mesh=)`` sweep outcome — the winning
+    config AND chip count against the oracle's argmin over all counts,
+    priced streaming (``warm=False``: matrix bytes dominate there, so
+    big matrices genuinely want chips while small ones stay
+    latency-bound on one);
+  * summary rows: shard counts recorded, mean/max regret per k, and
+    how many suite matrices the mesh sweep actually sharded.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.suite import cached_suite
+# Shared with the fig9/batch sections: `--only shard,...` runs in one
+# process and constructed candidate sizes are shard-independent (every
+# shard count prices the same encoded artifacts), so a private memo
+# would re-encode the most expensive part of the smoke run.
+from benchmarks.bench_format_selection import _ENC
+from repro.autotune import DecisionCache, clear_memo, oracle_times, select
+from repro.sparse.formats import CSR
+
+#: Shard counts priced head-to-head: single-chip and the 4-chip slice
+#: of a v5e pod — the pair the CI shard-smoke leg pins at zero regret.
+SHARD_COUNTS = (1, 4)
+
+#: Counts the mesh sweep may land on (powers of two up to the model
+#: axis the smoke leg hosts).
+SWEEP_COUNTS = (1, 2, 4)
+
+
+def _sweep_mesh():
+    """A 4-device ``model``-axis mesh when the host exposes one (the CI
+    leg forces 8 host devices); None means the sweep below falls back
+    to pinned per-count selection — same cost model, same argmin."""
+    import jax
+    if len(jax.devices()) < SWEEP_COUNTS[-1]:
+        return None
+    from repro.launch.mesh import make_debug_mesh
+    return make_debug_mesh((SWEEP_COUNTS[-1],), ("model",))
+
+
+def _spelled(dec) -> str:
+    return (dec.config_name if dec.n_shards == 1
+            else f"{dec.config_name}@S{dec.n_shards}")
+
+
+def run(small: bool = False, shard_counts: tuple = SHARD_COUNTS):
+    rows = []
+    regrets = {k: [] for k in shard_counts}
+    sharded_picks = 0
+    total = 0
+    mesh = _sweep_mesh()
+    cache = DecisionCache(path=None)   # memory-only: honest measurement
+    clear_memo()
+
+    for name, a64 in cached_suite(small=small).items():
+        a = CSR(a64.indptr, a64.indices,
+                a64.values.astype(np.float32), a64.shape)
+        enc = _ENC.setdefault(name, {})
+
+        # -- pinned shard counts: regret vs the oracle at the same k --
+        for k in shard_counts:
+            dec = select(a, warm=True, n_shards=k, cache=cache)
+            times = oracle_times(a, warm=True, n_shards=k,
+                                 encode_cache=enc)
+            o_name = min(times, key=times.get)
+            key = _spelled(dec)
+            regret = times[key] / times[o_name] - 1.0
+            regrets[k].append(regret)
+            rows.append((f"fig9shard/{name}@S{k}", 0.0,
+                         f"pick={key};oracle={o_name};"
+                         f"regret={regret:.4f}"))
+
+        # -- mesh sweep: let the argmin pick the chip count ------------
+        if mesh is not None:
+            dec = select(a, warm=False, mesh=mesh, cache=cache)
+        else:
+            picks = [select(a, warm=False, n_shards=k, cache=cache)
+                     for k in SWEEP_COUNTS]
+            dec = min(picks, key=lambda d: d.modeled_time)
+        times = oracle_times(a, warm=False, n_shards=SWEEP_COUNTS,
+                             encode_cache=enc)
+        o_name = min(times, key=times.get)
+        regret = times[_spelled(dec)] / times[o_name] - 1.0
+        sharded_picks += dec.n_shards > 1
+        total += 1
+        rows.append((f"fig9shard/{name}/sweep", 0.0,
+                     f"pick={_spelled(dec)};n_shards={dec.n_shards};"
+                     f"oracle={o_name};regret={regret:.4f}"))
+
+    rows.append(("fig9shard/shard_counts", 0.0,
+                 f"count={len(shard_counts)};"
+                 "sizes=" + ",".join(str(k) for k in shard_counts)))
+    rows.append(("fig9shard/mesh_sweep", 0.0,
+                 ("mode=shard_map" if mesh is not None else
+                  "mode=pinned_fallback")
+                 + f";sharded_picks={sharded_picks}/{total}"))
+    for k in shard_counts:
+        rows.append((f"fig9shard/mean_regret@S{k}", 0.0,
+                     f"{float(np.mean(regrets[k])):.4f}"))
+        rows.append((f"fig9shard/max_regret@S{k}", 0.0,
+                     f"{float(np.max(regrets[k])):.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

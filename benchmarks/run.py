@@ -10,6 +10,9 @@ Prints ``name,us_per_call,derived`` CSV.
             hand sides per pass (B in {1, 8, 32, 128}; the winning
             format flips once per-RHS contraction work overtakes the
             amortized per-pass costs)
+  shard   — sharded selection: selector-vs-oracle regret at pinned
+            shard counts {1, 4} plus the ``select(mesh=)`` sweep that
+            lets the argmin pick the chip count per matrix
   calib   — MachineModel calibration: fit cost-model constants to
             measured kernel times; ``--profile-json`` persists the
             fitted machine profile (CI uploads it as an artifact)
@@ -65,7 +68,7 @@ def main() -> None:
     from benchmarks import (bench_batch_selection, bench_calibration,
                             bench_compression, bench_delta_entropy,
                             bench_format_selection, bench_serving_load,
-                            bench_spmv)
+                            bench_shard_selection, bench_spmv)
 
     print("name,us_per_call,derived")
     sections = {
@@ -78,6 +81,7 @@ def main() -> None:
             small=args.small, measure=not args.no_measure,
             mtx_dir=args.mtx_dir, max_nnz=args.max_nnz),
         "batch": lambda: bench_batch_selection.run(small=args.small),
+        "shard": lambda: bench_shard_selection.run(small=args.small),
         "calib": lambda: bench_calibration.run(
             small=args.small, profile_json=args.profile_json),
         "load": lambda: bench_serving_load.run(

@@ -19,7 +19,8 @@ from repro.autotune.cost_model import (DTANS_LANE_WIDTHS, V5E, Candidate,
                                        MachineModel, bcsr_config_name,
                                        bcsr_dtans_nbytes_estimate,
                                        candidate_time,
-                                       candidates, coo_nbytes, csr_nbytes,
+                                       candidates, collective_time,
+                                       coo_nbytes, csr_nbytes,
                                        dtans_config_name,
                                        dtans_nbytes_estimate,
                                        memory_time, model_time,
@@ -45,7 +46,7 @@ from repro.autotune.measure import (NOISY_REL_IQR, CalibrationResult,
 from repro.autotune.oracle import oracle_best, oracle_times
 from repro.autotune.search import (ALL_FORMATS, Decision,
                                    choose_dtans_config, clear_memo,
-                                   select)
+                                   select, shard_counts)
 from repro.sparse.rgcsr import RGCSR_GROUP_SIZES
 
 __all__ = [
@@ -56,7 +57,7 @@ __all__ = [
     "atomic_merge_json", "bcsr_config_name",
     "bcsr_dtans_nbytes_estimate", "calibrate",
     "candidate_time", "candidates", "choose_dtans_config", "clear_memo",
-    "codeable_bits",
+    "codeable_bits", "collective_time",
     "coo_nbytes", "csr_nbytes", "default_cache", "default_cache_path",
     "default_profiles_path",
     "dtans_config_name",
@@ -69,7 +70,7 @@ __all__ = [
     "oracle_times", "register", "rgcsr_config_name",
     "rgcsr_dtans_config_name",
     "rgcsr_dtans_nbytes_estimate", "rgcsr_nbytes", "save_profile",
-    "select",
+    "select", "shard_counts",
     "sell_nbytes", "spmm_bytes", "spmv_bytes", "spmv_time",
     "time_kernel", "unregister", "work_time",
 ]

@@ -68,6 +68,12 @@ class MachineModel:
     decode_ops_per_nnz: float = 16   # unpack + 2 gathers + limb ops
     spmv_ops_per_elem: float = 1     # madd+gather per lock-step element
     row_seq_penalty: float = 8       # CSR/COO sublane utilization factor
+    # Interconnect terms of the sharded path (x broadcast + y psum over
+    # the mesh ``model`` axis): effective per-device ring-collective
+    # bandwidth over the v5e 2D-torus ICI, plus a fixed per-hop launch
+    # latency.
+    ici_bw: float = 9e10             # bytes/s per device, ring collective
+    collective_latency: float = 1e-6  # seconds per collective hop
 
     def signature(self) -> str:
         """Cache-key component: the *constants*, not just the name, so
@@ -75,7 +81,8 @@ class MachineModel:
         return (f"{self.name}:{self.hbm_bw:g}:{self.cache_bw:g}:"
                 f"{self.cache_bytes:g}:{self.vpu_rate:g}:"
                 f"{self.decode_ops_per_nnz:g}:{self.spmv_ops_per_elem:g}:"
-                f"{self.row_seq_penalty:g}")
+                f"{self.row_seq_penalty:g}:{self.ici_bw:g}:"
+                f"{self.collective_latency:g}")
 
     def to_dict(self) -> dict:
         """JSON form — the payload of a persisted machine profile
@@ -185,13 +192,38 @@ def spmv_time(nbytes: int, work_elems: float, ops_per_elem: float, *,
             + work_elems * ops_per_elem / machine.vpu_rate)
 
 
+def collective_time(n_shards: int, *, rows: int, cols: int, vbytes: int,
+                    batch: int = 1,
+                    machine: MachineModel = V5E) -> float:
+    """Seconds of interconnect work for one sharded SpMM pass: the x
+    broadcast (each device receives the full (cols, B) operand) and the
+    y all-reduce (ring psum moves ``(k-1)/k`` of the (rows, B) result
+    through each device), plus a log2(k) hop-latency floor per
+    collective — the reason tiny matrices never want 16 chips no matter
+    how fast their shards decode.  Zero at one shard (no collectives on
+    the single-device path)."""
+    k = int(n_shards)
+    if k <= 1:
+        return 0.0
+    wire = (cols + rows) * batch * vbytes * (k - 1) / k
+    return wire / machine.ici_bw + \
+        2 * machine.collective_latency * math.ceil(math.log2(k))
+
+
 def candidate_time(fp: Fingerprint, fmt: str, nbytes: int, *, warm: bool,
                    machine: MachineModel = V5E, batch: int = 1,
-                   **knobs) -> float:
+                   n_shards: int = 1, **knobs) -> float:
     """Modeled seconds of one (format, config) from fingerprint
     features: `memory_time` plus the `work_time` of the format's
     `CostTerms` — for a ``batch``-RHS SpMM pass (matrix bytes and
     decode work once, x/y bytes and contraction work per RHS).
+
+    ``n_shards > 1`` prices the sharded path: the critical-path device
+    holds ~1/k of the matrix bytes and does 1/k of the decode and
+    contraction work (the row partition is balanced over decode
+    slices), pays the full broadcast x against the cache, and the pass
+    ends in the `collective_time` x-broadcast/y-reduce — the
+    single-chip-vs-k-chips trade `search.select(mesh=)` arbitrates.
 
     The single formula shared by `candidates`, `search._refine`, the
     exhaustive oracle (`repro.autotune.oracle`) and calibration —
@@ -200,10 +232,19 @@ def candidate_time(fp: Fingerprint, fmt: str, nbytes: int, *, warm: bool,
     set."""
     spec = get_format(fmt)
     terms = spec.cost_terms(fp, **spec.filter_knobs(knobs))
+    k = max(int(n_shards), 1)
+    if k > 1:
+        nbytes = -(-int(nbytes) // k)
+        terms = CostTerms(lockstep=terms.lockstep / k,
+                          rowseq=terms.rowseq / k,
+                          decode=terms.decode / k)
     return (memory_time(spmm_bytes(nbytes, fp.cols, fp.rows,
                                    fp.value_bytes, batch),
                         warm=warm, machine=machine)
-            + work_time(terms, machine, batch))
+            + work_time(terms, machine, batch)
+            + collective_time(k, rows=fp.rows, cols=fp.cols,
+                              vbytes=fp.value_bytes, batch=batch,
+                              machine=machine))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -221,6 +262,10 @@ class Candidate(KnobbedConfigMixin):
     modeled_time: float           # seconds per SpMVM pass
     exact_size: bool              # True when nbytes is not an estimate
     knobs: tuple = ()             # ((knob, value), ...), domain order
+    # Devices the candidate is priced for (1 = single-chip path; > 1
+    # adds the `collective_time` terms). Not part of the config name —
+    # the same (format, knobs) point exists once per shard count.
+    n_shards: int = 1
     # Median wall-clock seconds from `repro.autotune.measure`; filled
     # by the measured-refinement pass, None for modeled-only search.
     measured_time: float | None = None
@@ -229,16 +274,18 @@ class Candidate(KnobbedConfigMixin):
 def make_candidate(fp: Fingerprint, fmt: str, knobs: dict, nbytes: int,
                    exact: bool, *, warm: bool,
                    machine: MachineModel = V5E,
-                   batch: int = 1) -> Candidate:
+                   batch: int = 1, n_shards: int = 1) -> Candidate:
     """Price one (format, knobs, nbytes) point into a `Candidate`."""
     spec = get_format(fmt)
     kn = spec.normalize_knobs(knobs)
     return Candidate(
         fmt=fmt, nbytes=int(nbytes),
         modeled_time=candidate_time(fp, fmt, nbytes, warm=warm,
-                                    machine=machine, batch=batch, **kn),
+                                    machine=machine, batch=batch,
+                                    n_shards=n_shards, **kn),
         exact_size=bool(exact),
-        knobs=tuple((k, kn[k]) for k in spec.knob_domains))
+        knobs=tuple((k, kn[k]) for k in spec.knob_domains),
+        n_shards=int(n_shards))
 
 
 def csr_nbytes(fp: Fingerprint) -> int:
@@ -434,6 +481,7 @@ def candidates(fp: Fingerprint, *, machine: MachineModel = V5E,
                warm: bool = True, params: DtansParams = PAPER,
                formats: tuple = None,
                batch: int = 1,
+               n_shards: int = 1,
                knob_overrides: dict | None = None,
                lane_widths: tuple = None,
                group_sizes: tuple = None,
@@ -444,6 +492,8 @@ def candidates(fp: Fingerprint, *, machine: MachineModel = V5E,
     selectable format joins the sweep with no edit here. ``formats``
     defaults to every selectable registered family; ``batch`` prices a
     multi-RHS SpMM pass (decode and matrix bytes amortize over B);
+    ``n_shards`` prices every point for a k-device sharded pass
+    (`search.select(mesh=)` unions the sweep over shard counts);
     ``knob_overrides`` narrows/extends any knob domain by name (the
     named keywords remain as sugar for the three built-in knobs).
     """
@@ -462,6 +512,6 @@ def candidates(fp: Fingerprint, *, machine: MachineModel = V5E,
                                                     params=params):
             out.append(make_candidate(fp, fmt, knobs, nbytes, exact,
                                       warm=warm, machine=machine,
-                                      batch=batch))
+                                      batch=batch, n_shards=n_shards))
     out.sort(key=lambda cand: cand.modeled_time)
     return out

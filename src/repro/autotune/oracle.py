@@ -29,6 +29,7 @@ def oracle_times(a, *, warm: bool = True, machine: MachineModel = V5E,
                  params: DtansParams = PAPER,
                  formats: tuple | None = None,
                  batch: int = 1,
+                 n_shards: int | tuple = 1,
                  knob_overrides: dict | None = None,
                  lane_widths: tuple | None = None,
                  group_sizes: tuple | None = None,
@@ -38,9 +39,13 @@ def oracle_times(a, *, warm: bool = True, machine: MachineModel = V5E,
 
     ``batch`` prices a multi-RHS SpMM pass exactly as `select(batch=)`
     does (same `candidate_time`), so selector-vs-oracle regret is
-    meaningful at every batch size. ``knob_overrides`` narrows any knob
-    domain by name, third-party specs included; the three named
-    keywords remain as sugar, exactly as in `select`.
+    meaningful at every batch size. ``n_shards`` — an int or a tuple of
+    counts — additionally prices each configuration for k-device
+    sharded passes, keyed ``"<config>@S<k>"`` for k > 1 (the bare
+    config name stays the single-chip entry, matching
+    `select(mesh=)`'s leaderboard spelling). ``knob_overrides`` narrows
+    any knob domain by name, third-party specs included; the three
+    named keywords remain as sugar, exactly as in `select`.
 
     ``encode_cache`` (any mutable mapping) memoizes the expensive dtANS
     encodes across repeated calls (e.g. warm and cold evaluation of the
@@ -58,15 +63,20 @@ def oracle_times(a, *, warm: bool = True, machine: MachineModel = V5E,
                                      block_shapes=block_shapes)
     if formats is None:
         formats = format_names(selectable=True)
+    ks = ((int(n_shards),) if isinstance(n_shards, int)
+          else tuple(int(k) for k in n_shards))
     times: dict[str, float] = {}
     for fmt in formats:
         spec = get_format(fmt)
         for knobs in spec.knob_grid(fp, overrides):
             b = spec.nbytes_constructed(a, params=params, artifacts=enc,
                                         **knobs)
-            times[spec.encode_knobs(knobs)] = candidate_time(
-                fp, fmt, b, warm=warm, machine=machine, batch=batch,
-                **knobs)
+            name = spec.encode_knobs(knobs)
+            for k in ks:
+                key = name if k == 1 else f"{name}@S{k}"
+                times[key] = candidate_time(
+                    fp, fmt, b, warm=warm, machine=machine, batch=batch,
+                    n_shards=k, **knobs)
     return times
 
 

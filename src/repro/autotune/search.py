@@ -77,6 +77,11 @@ class Decision(KnobbedConfigMixin):
     # Number of right-hand sides the selection was priced for (the
     # SpMM batch; 1 = the classic single-vector SpMV regime).
     batch: int = 1
+    # Devices the winning plan runs on (1 = single-chip; > 1 = the
+    # row-sharded shard_map path priced with `collective_time`).
+    # `select(mesh=)` sweeps shard counts and this is its answer to
+    # "does this matrix want 1, 4, or 16 chips?".
+    n_shards: int = 1
     # Median wall-clock seconds of the winner's real kernel when the
     # selection ran with ``measure=True``; None for modeled-only runs.
     # Modeled and measured seconds are different currencies (interpret
@@ -160,14 +165,35 @@ def _refine(a, cand: Candidate, fp: Fingerprint, *, warm: bool,
     b = spec.nbytes_constructed(a, params=params, artifacts=artifacts,
                                 **kn)
     t = candidate_time(fp, cand.fmt, b, warm=warm, machine=machine,
-                       batch=batch, **kn)
+                       batch=batch, n_shards=cand.n_shards, **kn)
     return dataclasses.replace(cand, nbytes=int(b), modeled_time=t,
                                exact_size=True)
+
+
+def shard_counts(mesh=None, n_shards=None) -> tuple:
+    """Shard counts one selection sweeps: an explicit ``n_shards`` pins
+    a single count, a mesh sweeps the powers of two up to its ``model``
+    axis (1, 2, 4, ... — the counts a mesh can actually host), and
+    neither means the classic single-chip search ``(1,)``."""
+    if n_shards is not None:
+        if int(n_shards) < 1:
+            raise ValueError(f"n_shards must be >= 1; got {n_shards}")
+        return (int(n_shards),)
+    if mesh is not None:
+        from repro.launch.mesh import model_axis_size
+        msize = model_axis_size(mesh)
+        ks, k = [], 1
+        while k <= msize:
+            ks.append(k)
+            k *= 2
+        return tuple(ks)
+    return (1,)
 
 
 def select(a, *, machine: MachineModel = V5E, warm: bool = True,
            formats: tuple | None = None, budget: int = 0,
            batch: int = 1,
+           mesh=None, n_shards: int | None = None,
            measure: bool = False, measure_warmup: int = 1,
            measure_repeats: int = 3, interpret: bool = True,
            params: DtansParams = PAPER,
@@ -194,6 +220,15 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
         once per pass, x/y bytes and contraction work per RHS — so the
         winning format can flip as B grows (decode overhead amortizes).
         Part of both cache keys.
+      mesh: price every candidate at every power-of-two shard count up
+        to the mesh ``model`` axis (`shard_counts`) and let the argmin
+        decide how many chips the matrix wants — the winner's count
+        lands in ``Decision.n_shards``. Only the model axis SIZE enters
+        the search (and the cache keys); the mesh object itself is
+        never stored.
+      n_shards: pin the sweep to exactly one shard count instead
+        (overrides ``mesh``); ``None`` + no mesh = the classic
+        single-chip search.
       measure: with ``budget > 0``, additionally wall-clock time the
         top-``budget`` candidates' real kernels
         (`repro.autotune.measure`, at this ``batch``) and rank them by
@@ -229,6 +264,12 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
                          "refined head is packed and timed)")
     if batch < 1:
         raise ValueError(f"batch must be >= 1; got {batch}")
+    ks = shard_counts(mesh, n_shards)
+    if measure and ks != (1,):
+        raise ValueError("measure=True is single-device only (the "
+                         "timing harness wall-clocks one chip's "
+                         "kernels); drop mesh=/n_shards= or measure "
+                         "at shards=1")
     if formats is None:
         formats = format_names(selectable=True)
     cache = cache if cache is not None else default_cache()
@@ -249,8 +290,8 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
     # The cache object is part of the memo key: a repeat select with a
     # *different* cache must consult (and populate) that cache, not
     # short-circuit on the memo.
-    cfg = (machine, warm, tuple(formats), int(budget), int(batch), ko,
-           doms, params, cache, bool(measure), int(measure_warmup),
+    cfg = (machine, warm, tuple(formats), int(budget), int(batch), ks,
+           ko, doms, params, cache, bool(measure), int(measure_warmup),
            int(measure_repeats), bool(interpret))
     if use_cache:
         hit = _memo.get(id(a))
@@ -267,6 +308,10 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
                  "doms:" + hashlib.sha1(doms.encode()).hexdigest()[:12],
                  f"w{pp.w_bits}k{pp.k_bits}l{pp.l}o{pp.o}"
                  f"f{pp.f}m{pp.m_bits}"]
+    if ks != (1,):
+        # Sharded searches key separately; the classic single-chip key
+        # is unchanged, so existing cache files stay valid.
+        key_parts.append("shards:" + ",".join(map(str, ks)))
     if measure:
         # Measured decisions key separately from modeled ones (and by
         # harness knobs): the currencies must never be mixed by a
@@ -286,9 +331,13 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
                 _decision_event(dec, source="cache")
                 return dec
 
-    cands = candidates(fp, machine=machine, warm=warm, params=params,
-                       formats=tuple(formats), batch=batch,
-                       knob_overrides=overrides)
+    cands = []
+    for k in ks:
+        cands.extend(candidates(fp, machine=machine, warm=warm,
+                                params=params, formats=tuple(formats),
+                                batch=batch, n_shards=k,
+                                knob_overrides=overrides))
+    cands.sort(key=lambda cand: cand.modeled_time)
     if not cands:
         # Possible since FormatSpec.admit: e.g. bcsr_dtans's fill-in
         # guard prunes every block shape on scatter-structured
@@ -329,9 +378,13 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
         fmt=best.fmt, knobs=best.knobs, nbytes=best.nbytes,
         modeled_time=best.modeled_time, exact_size=best.exact_size,
         warm=warm, machine=machine.name, fingerprint_key=fp.key(),
-        refined=refined, batch=int(batch),
+        refined=refined, batch=int(batch), n_shards=best.n_shards,
         measured_time=best.measured_time,
-        leaderboard=tuple((c.config_name, c.nbytes, c.modeled_time,
+        # Sharded rows spell the oracle's "<config>@S<k>" key so regret
+        # tables line up; single-chip rows keep the bare config name.
+        leaderboard=tuple((c.config_name if c.n_shards == 1
+                           else f"{c.config_name}@S{c.n_shards}",
+                           c.nbytes, c.modeled_time,
                            c.measured_time) for c in cands[:5]),
     )
     if use_cache:
@@ -347,6 +400,7 @@ def select(a, *, machine: MachineModel = V5E, warm: bool = True,
 def choose_dtans_config(a, *, machine: MachineModel = V5E,
                         warm: bool = True, budget: int = 0,
                         batch: int = 1,
+                        mesh=None, n_shards: int | None = None,
                         measure: bool = False, interpret: bool = True,
                         params: DtansParams = PAPER,
                         cache: DecisionCache | None = None,
@@ -365,6 +419,7 @@ def choose_dtans_config(a, *, machine: MachineModel = V5E,
     """
     return select(a, machine=machine, warm=warm,
                   formats=format_names(selectable=True, decodes=True),
-                  budget=budget, batch=batch, measure=measure,
+                  budget=budget, batch=batch, mesh=mesh,
+                  n_shards=n_shards, measure=measure,
                   interpret=interpret, params=params, cache=cache,
                   use_cache=use_cache, artifacts=artifacts)

@@ -11,6 +11,15 @@ for all B columns — the batched serving path `SparseLinear.apply`
 routes through. All eight share the ``(mat, x, y=None, *, interpret=)``
 signature; B == 1 delegates to the single-vector kernel, so spmm results
 at B=1 are bit-identical to spmv.
+
+`spmv` / `spmm` additionally take ``mesh=`` / ``n_shards=``: with more
+than one shard the matrix is row-partitioned along decode-slice
+boundaries (`repro.sparse.shard`, cached on the object like the packed
+artifact) and executed by `repro.kernels.shard_ops` — `shard_map` +
+psum over the mesh ``model`` axis, or a sequential per-shard loop when
+no mesh is given.  Results are bit-identical to the single-device
+kernels at every shard count, and shards == 1 IS the single-device
+path (no plan is built).
 """
 
 from __future__ import annotations
@@ -33,6 +42,7 @@ from repro.kernels.sell_spmv import (PackedSELL, sell_spmm_pallas,
 
 _PACK_CACHE_FIELD = "_packed_cache"
 _OBS_NBYTES_FIELD = "_obs_nbytes"
+_SHARD_PLAN_FIELD = "_shard_plans"
 
 
 def _packed_nbytes(pm) -> int:
@@ -87,9 +97,65 @@ def _tabs(pm: PackedMatrix):
             jnp.asarray(pm.tab_base), jnp.asarray(pm.tab_is_esc))
 
 
+def _resolve_shards(mesh, n_shards) -> int:
+    """Shard count from the (mesh=, n_shards=) knobs: an explicit
+    ``n_shards`` wins, else the mesh ``model`` axis, else 1."""
+    if n_shards is not None:
+        if int(n_shards) < 1:
+            raise ValueError(f"n_shards must be >= 1; got {n_shards}")
+        return int(n_shards)
+    if mesh is not None:
+        from repro.launch.mesh import model_axis_size
+        return model_axis_size(mesh)
+    return 1
+
+
+def get_shard_plan(mat: CSRdtANS, n_shards: int):
+    """The ``n_shards``-way shard plan for a CSR-dtANS matrix, built
+    through the registry seam at the matrix's own encode knobs and
+    cached on the object (one plan per shard count) like `get_packed`.
+    Decode is lossless, so re-encoding each row block at the same
+    ``lane_width`` reproduces the single-device decode values exactly."""
+    plans = getattr(mat, _SHARD_PLAN_FIELD, None)
+    if plans is None:
+        plans = {}
+        object.__setattr__(mat, _SHARD_PLAN_FIELD, plans)
+    plan = plans.get(n_shards)
+    if plan is None:
+        from repro.core.csr_dtans import decode_matrix
+        from repro.sparse.registry import get_format
+        plan = get_format("dtans").shard(
+            decode_matrix(mat), n_shards, params=mat.params,
+            lane_width=mat.lane_width,
+            shared_table=len(mat.tables) == 1)
+        plans[n_shards] = plan
+    return plan
+
+
+def _sharded_dtans(mat, x, y, *, mesh, k, interpret, spmm: bool):
+    from repro.kernels import shard_ops
+    if not isinstance(mat, CSRdtANS):
+        raise TypeError(
+            "sharded spmv/spmm needs the CSRdtANS matrix (a bare packed "
+            "artifact carries no bitstream to re-partition); pass the "
+            "matrix object or shards=1")
+    plan = get_shard_plan(mat, k)
+    fn = shard_ops.shard_spmm if spmm else shard_ops.shard_spmv
+    return fn(plan, x, y=y, mesh=mesh, interpret=interpret)
+
+
 def spmv(mat: CSRdtANS | PackedMatrix, x, y=None, *,
-         interpret: bool = True) -> jax.Array:
-    """y = A x + y with on-the-fly dtANS decoding (fused Pallas kernel)."""
+         interpret: bool = True, mesh=None, n_shards=None) -> jax.Array:
+    """y = A x + y with on-the-fly dtANS decoding (fused Pallas kernel).
+
+    With ``mesh=`` (model axis > 1) or ``n_shards= > 1`` the matrix is
+    row-partitioned along decode-slice boundaries and each device
+    decodes only its shard (`repro.kernels.shard_ops`); results stay
+    bit-identical to the single-device kernel."""
+    k = _resolve_shards(mesh, n_shards)
+    if k > 1:
+        return _sharded_dtans(mat, x, y, mesh=mesh, k=k,
+                              interpret=interpret, spmm=False)
     pm = get_packed(mat) if isinstance(mat, CSRdtANS) else mat
     dt = _out_dtype(pm)
     m, n = pm.shape
@@ -127,10 +193,15 @@ def _empty_y(m: int, y, dt):
 
 
 def spmm(mat: CSRdtANS | PackedMatrix, x, y=None, *,
-         interpret: bool = True) -> jax.Array:
+         interpret: bool = True, mesh=None, n_shards=None) -> jax.Array:
     """Y = A X + Y, X: (n, B) — decode once, contract all B columns in
     the fused kernel. B == 1 runs the single-vector `spmv` kernel, so
-    the results are bit-identical to it."""
+    the results are bit-identical to it.  ``mesh=`` / ``n_shards=``
+    shard the rows across devices exactly as in `spmv`."""
+    k = _resolve_shards(mesh, n_shards)
+    if k > 1:
+        return _sharded_dtans(mat, x, y, mesh=mesh, k=k,
+                              interpret=interpret, spmm=True)
     pm = get_packed(mat) if isinstance(mat, CSRdtANS) else mat
     dt = _out_dtype(pm)
     m, n = pm.shape

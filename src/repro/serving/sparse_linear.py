@@ -38,6 +38,9 @@ class SparseLinear:
     dense_bytes: int
     baseline_bytes: int      # best of CSR/COO/SELL on the pruned matrix
     decision: object = None  # autotune Decision when built with auto=True
+    mesh: object = None      # jax mesh the layer serves from (or None)
+    n_shards: int = 1        # row shards of the weight (1 = one chip)
+    plan: object = None      # sparse.shard.ShardPlan when n_shards > 1
 
     @classmethod
     def from_dense(cls, w: np.ndarray, sparsity: float = 0.8,
@@ -47,7 +50,9 @@ class SparseLinear:
                    autotune_batch: int = 1,
                    autotune_cache=None,
                    autotune_measure: bool = False,
-                   autotune_machine=None) -> "SparseLinear":
+                   autotune_machine=None,
+                   mesh=None, n_shards: int | None = None
+                   ) -> "SparseLinear":
         """Compress a dense projection for decode-on-the-fly serving.
 
         The source dtype is preserved end-to-end: a float64 projection
@@ -77,33 +82,58 @@ class SparseLinear:
         default v5e constants; ``autotune_cache`` overrides the default
         persistent cache (pass ``repro.autotune.DecisionCache(path=None)``
         for memory-only).
+
+        ``mesh`` builds the layer for multi-chip serving: the pruned
+        weight is row-partitioned into ``model_axis_size(mesh)`` shards
+        along the winning format's decode-slice boundaries
+        (`FormatSpec.shard`) and `apply` routes through the shard_map +
+        psum path (`repro.kernels.shard_ops`) — every device decodes
+        only its shard's bitstream. ``n_shards`` pins the shard count
+        explicitly (usable without a mesh: the sequential sharded path,
+        mostly for tests). The selection, when ``auto=True``, is priced
+        at the same shard count it will serve on.
         """
+        from repro.sparse.registry import get_format
         d_in, d_out = w.shape
         w_arr = np.asarray(w)
         if w_arr.dtype not in (np.float32, np.float64):
             w_arr = w_arr.astype(np.float32)
         pruned = magnitude_prune(w_arr.T, sparsity)
         pruned = codebook_quantize(pruned, bits=value_bits)
+        if n_shards is not None:
+            k = int(n_shards)
+        elif mesh is not None:
+            from repro.launch.mesh import model_axis_size
+            k = model_axis_size(mesh)
+        else:
+            k = 1
         decision = None
         if auto:
             from repro.autotune import V5E, choose_dtans_config
-            from repro.sparse.registry import get_format
             decision = choose_dtans_config(
                 pruned, warm=True, budget=autotune_budget,
-                batch=autotune_batch,
-                measure=autotune_measure,
+                batch=autotune_batch, n_shards=k,
+                # The timing harness is single-device; sharded builds
+                # select on the modeled sharded cost instead.
+                measure=autotune_measure if k == 1 else False,
                 machine=autotune_machine
                 if autotune_machine is not None else V5E,
                 cache=autotune_cache)
-            mat = get_format(decision.fmt).encode(
-                pruned, **decision.knobs_dict())
+            spec = get_format(decision.fmt)
+            knobs = decision.knobs_dict()
+            mat = spec.encode(pruned, **knobs)
         else:
+            spec = get_format("dtans")
+            knobs = {"lane_width": lane_width,
+                     "shared_table": shared_table}
             mat = encode_matrix(pruned, lane_width=lane_width,
                                 shared_table=shared_table)
+        plan = spec.shard(pruned, k, **knobs) if k > 1 else None
         _, bb = best_baseline_nbytes(pruned)
         return cls(mat=mat, packed=pack_matrix(mat), d_in=d_in,
                    d_out=d_out, dense_bytes=w.size * w.dtype.itemsize,
-                   baseline_bytes=bb, decision=decision)
+                   baseline_bytes=bb, decision=decision, mesh=mesh,
+                   n_shards=k, plan=plan)
 
     @property
     def compressed_bytes(self) -> int:
@@ -142,9 +172,16 @@ class SparseLinear:
         reg.counter("serving.sparse_apply_calls").add(1)
         reg.histogram("serving.apply_batch").observe(xb.shape[0])
         with obs.span("serving.sparse_apply", batch=int(xb.shape[0]),
-                      d_in=self.d_in, d_out=self.d_out):
-            y = ops.spmm(self.packed, xb.T,
-                         interpret=interpret)  # (d_out, B)
+                      d_in=self.d_in, d_out=self.d_out,
+                      n_shards=int(self.n_shards)):
+            if self.plan is not None:
+                from repro.kernels import shard_ops
+                y = shard_ops.shard_spmm(self.plan, xb.T,
+                                         mesh=self.mesh,
+                                         interpret=interpret)
+            else:
+                y = ops.spmm(self.packed, xb.T,
+                             interpret=interpret)  # (d_out, B)
         return y.T.reshape(*lead, self.d_out).astype(x.dtype)
 
     def apply_dense_reference(self, x):

@@ -31,8 +31,12 @@ import numpy as np
 from repro.sparse.formats import CSR
 
 #: Block shapes swept by the autotuner (`repro.autotune`); the
-#: fingerprint carries an exact nonempty-block count for each.
-BCSR_BLOCK_SHAPES = ((2, 2), (4, 4), (8, 8))
+#: fingerprint carries an exact nonempty-block count for each.  The
+#: rectangular entries cover banded/row-run structure (wide blocks pay
+#: less row metadata per stored cell; tall blocks align more rows per
+#: block row) — the format and fingerprint support any r x c, this
+#: tuple is only the default sweep.
+BCSR_BLOCK_SHAPES = ((2, 2), (4, 4), (8, 8), (2, 4), (4, 2))
 
 
 def count_nonempty_blocks(indptr: np.ndarray, indices: np.ndarray,

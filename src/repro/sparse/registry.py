@@ -336,6 +336,74 @@ class FormatSpec:
         packed = self.pack(a, params=params, **knobs)
         return self.spmm_runner(packed, x, interpret=interpret)()
 
+    # -- sharding (multi-device row partition) -----------------------
+
+    def shard_unit(self, knobs: dict | None = None) -> int:
+        """Row alignment of a shard boundary: the height of the
+        format's independent row unit (decode slice / group / block
+        row).  Slices never straddle shards, so `shard` cuts only at
+        multiples of this.  Default: the encoded interleave width for
+        the ``decodes=True`` families, 1 (any row) otherwise."""
+        return int(self.interleave_width(knobs) or 1)
+
+    def shard(self, a, n_shards: int, *, params: DtansParams = PAPER,
+              artifacts: dict | None = None, **knobs):
+        """Row-partition matrix ``a`` into an ``n_shards``-way
+        `repro.sparse.shard.ShardPlan` — the registry-generic seam
+        (same pattern as `spmm_runner`): boundaries at `shard_unit`
+        multiples, each row block packed through this family's own
+        `pack`, per-shard sizes exact via `nbytes_constructed`.  A
+        third-party spec that implements the single-device contract
+        shards for free.
+
+        ``artifacts`` memoizes each shard's expensive constructed
+        artifact under ``artifact_key + (n_shards, k)`` — one mapping
+        shared with the oracle / refinement convention."""
+        from repro.sparse.shard import ShardPlan, csr_row_block, \
+            shard_boundaries
+        kn = self._knobs(knobs)
+        unit = self.shard_unit(kn)
+        bounds = shard_boundaries(a.shape[0], n_shards, unit)
+        arts = artifacts if artifacts is not None else {}
+        shards = []
+        sizes = []
+        for k in range(n_shards):
+            sub = csr_row_block(a, bounds[k], bounds[k + 1])
+            key = self.artifact_key(kn) + ("shard", n_shards, k)
+            sub_arts = arts.setdefault(key, {})
+            shards.append(self.pack(sub, params=params,
+                                    artifacts=sub_arts, **kn))
+            sizes.append(int(self.nbytes_constructed(
+                sub, params=params, artifacts=sub_arts, **kn)))
+        return ShardPlan(fmt=self.name,
+                         knobs=tuple((k, kn[k]) for k in
+                                     self.knob_domains),
+                         n_shards=int(n_shards), unit=unit,
+                         boundaries=bounds, shards=tuple(shards),
+                         shard_nbytes=tuple(sizes), shape=a.shape,
+                         dtype=np.dtype(a.values.dtype))
+
+    def shard_runner(self, plan, x, *, mesh=None,
+                     interpret: bool = True):
+        """Zero-arg callable computing ``y = A x`` (1-D ``x``) or
+        ``Y = A X`` (2-D ``x``) from a `shard` plan — the sharded
+        analogue of `runner` / `spmm_runner`.  With a ``mesh`` whose
+        ``model`` axis matches ``plan.n_shards``, kernel-backed
+        families run under `jax.shard_map` (each device decodes only
+        its shard, partial y's reduce via psum); otherwise — and for
+        packed artifacts without a registered shard_map adapter — a
+        sequential per-shard loop through this family's single-device
+        runners, so EVERY registered format (third-party specs
+        included) has a sharded path."""
+        from repro.kernels import shard_ops
+        x2 = np.asarray(x)
+        if x2.ndim == 1:
+            return lambda: shard_ops.shard_spmv(plan, x,
+                                                mesh=mesh,
+                                                interpret=interpret)
+        return lambda: shard_ops.shard_spmm(plan, x, mesh=mesh,
+                                            interpret=interpret)
+
     # -- encoded artifact (decodes=True formats) ---------------------
 
     def encode(self, a, *, params: DtansParams = PAPER, **knobs):
@@ -594,6 +662,9 @@ class SellSpec(FormatSpec):
         from repro.kernels import ops
         return ops.sell_spmm
 
+    def shard_unit(self, knobs=None) -> int:
+        return int(self._knobs(knobs or {})["slice_height"])
+
     def pack(self, a, *, params=PAPER, artifacts=None, slice_height=32):
         from repro.kernels.sell_spmv import pack_sell
         return pack_sell(a, lane_width=int(slice_height))
@@ -635,6 +706,9 @@ class RgcsrSpec(FormatSpec):
     def spmm_fn(self):
         from repro.kernels import ops
         return ops.rgcsr_spmm
+
+    def shard_unit(self, knobs=None) -> int:
+        return int(self._knobs(knobs or {})["group_size"])
 
     def pack(self, a, *, params=PAPER, artifacts=None, group_size=4):
         from repro.kernels.rgcsr_spmv import pack_rgcsr
@@ -817,6 +891,9 @@ class BcsrSpec(FormatSpec):
     def spmm_fn(self):
         from repro.kernels import ops
         return ops.bcsr_spmm
+
+    def shard_unit(self, knobs=None) -> int:
+        return int(self._knobs(knobs or {})["block_shape"][0])
 
     def pack(self, a, *, params=PAPER, artifacts=None,
              block_shape=(2, 2)):

@@ -1,0 +1,131 @@
+"""Unit tests for the partition layer (`repro.sparse.shard`) and the
+registry shard seam (`FormatSpec.shard_unit` / `shard`): boundary
+arithmetic, CSR row-block slicing, plan invariants, per-family shard
+units, and exact per-shard byte accounting.
+"""
+
+import numpy as np
+import pytest
+
+from repro.sparse.formats import CSR
+from repro.sparse.registry import get_format, iter_formats
+from repro.sparse.shard import ShardPlan, csr_row_block, shard_boundaries
+
+
+def _rand_csr(m, n, density=0.2, seed=0):
+    rng = np.random.default_rng(seed)
+    d = (rng.random((m, n)) < density) * rng.standard_normal((m, n))
+    return CSR.from_dense(d)
+
+
+class TestShardBoundaries:
+    def test_balanced_units(self):
+        # 10 units of 8 rows over 4 shards: 3,3,2,2 units
+        assert shard_boundaries(80, 4, 8) == (0, 24, 48, 64, 80)
+
+    def test_unit_alignment(self):
+        for m, k, u in [(100, 3, 16), (57, 4, 8), (128, 5, 32)]:
+            b = shard_boundaries(m, k, u)
+            assert b[0] == 0 and b[-1] == m and len(b) == k + 1
+            assert all(x % u == 0 for x in b[1:-1]), (m, k, u, b)
+            assert all(b[i] <= b[i + 1] for i in range(k))
+
+    def test_ragged_tail(self):
+        # 57 rows, unit 8 -> 8 units; 4 shards get 2 units each, the
+        # last owning the 1-row tail
+        assert shard_boundaries(57, 4, 8) == (0, 16, 32, 48, 57)
+
+    def test_more_shards_than_units(self):
+        b = shard_boundaries(16, 4, 16)     # one unit, four shards
+        assert b == (0, 16, 16, 16, 16)     # trailing shards empty
+
+    def test_zero_rows(self):
+        assert shard_boundaries(0, 3) == (0, 0, 0, 0)
+
+    def test_single_shard_is_whole_matrix(self):
+        assert shard_boundaries(100, 1, 32) == (0, 100)
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            shard_boundaries(10, 0)
+        with pytest.raises(ValueError):
+            shard_boundaries(10, 2, 0)
+
+
+class TestCsrRowBlock:
+    def test_round_trip(self):
+        a = _rand_csr(23, 17)
+        d = a.to_dense()
+        for r0, r1 in [(0, 23), (0, 10), (5, 18), (22, 23), (7, 7)]:
+            sub = csr_row_block(a, r0, r1)
+            assert sub.shape == (r1 - r0, 17)
+            np.testing.assert_array_equal(sub.to_dense(), d[r0:r1])
+            assert sub.indptr[0] == 0
+
+    def test_blocks_cover_matrix(self):
+        a = _rand_csr(40, 11, seed=3)
+        b = shard_boundaries(40, 3, 4)
+        parts = [csr_row_block(a, b[k], b[k + 1]).to_dense()
+                 for k in range(3)]
+        np.testing.assert_array_equal(np.concatenate(parts),
+                                      a.to_dense())
+
+    def test_out_of_range(self):
+        a = _rand_csr(10, 5)
+        for r0, r1 in [(-1, 5), (3, 11), (7, 3)]:
+            with pytest.raises(ValueError):
+                csr_row_block(a, r0, r1)
+
+
+class TestShardSeam:
+    def test_shard_units_per_family(self):
+        """Each family's shard unit is its decode-slice / group / block
+        row height at the given knobs — the alignment that keeps units
+        from straddling shards."""
+        assert get_format("dtans").shard_unit({"lane_width": 64}) == 64
+        assert get_format("sell").shard_unit({"slice_height": 16}) == 16
+        assert get_format("rgcsr").shard_unit({"group_size": 8}) == 8
+        assert get_format("bcsr").shard_unit(
+            {"block_shape": (4, 2)}) == 4
+        assert get_format("rgcsr_dtans").shard_unit(
+            {"group_size": 32}) == 32
+        assert get_format("bcsr_dtans").shard_unit(
+            {"block_shape": (2, 4)}) == 2
+        for fmt in ("dense", "csr", "coo"):
+            assert get_format(fmt).shard_unit() == 1
+
+    @pytest.mark.parametrize("fmt",
+                             [s.name for s in iter_formats()])
+    def test_plan_invariants(self, fmt):
+        spec = get_format(fmt)
+        a = _rand_csr(70, 30, seed=7)
+        kn = spec.conformance_knobs
+        plan = spec.shard(a, 3, **kn)
+        assert isinstance(plan, ShardPlan)
+        assert plan.fmt == fmt and plan.n_shards == 3
+        assert plan.shape == (70, 30)
+        assert plan.unit == spec.shard_unit(spec._knobs(kn))
+        assert len(plan.shards) == 3 and len(plan.shard_nbytes) == 3
+        assert sum(plan.shard_rows) == 70
+        assert plan.total_nbytes == sum(plan.shard_nbytes)
+        assert plan.max_shard_nbytes == max(plan.shard_nbytes)
+        assert all(b >= 0 for b in plan.shard_nbytes)
+
+    def test_per_shard_nbytes_exact(self):
+        """shard_nbytes matches the family's own exact accounting of
+        each row block — the numbers the sharded cost model prices."""
+        spec = get_format("dtans")
+        a = _rand_csr(64, 24, seed=11)
+        plan = spec.shard(a, 2, lane_width=16)
+        for k in range(2):
+            sub = csr_row_block(a, plan.boundaries[k],
+                                plan.boundaries[k + 1])
+            b = spec.nbytes_constructed(sub, lane_width=16)
+            assert plan.shard_nbytes[k] == b
+
+    def test_plan_validation(self):
+        with pytest.raises(ValueError):
+            ShardPlan(fmt="dtans", knobs=(), n_shards=2, unit=1,
+                      boundaries=(0, 10), shards=((), ()),
+                      shard_nbytes=(1, 1), shape=(10, 5),
+                      dtype=np.float64)

@@ -1,0 +1,169 @@
+"""Sharded-vs-single-device conformance: the ISSUE's acceptance bar.
+
+For EVERY registered format family, at shards in {1, 2, 4} and B in
+{1, 8}, the sharded execution paths must be BIT-IDENTICAL (exact
+``==``, not allclose) to the single-device kernels:
+
+* the sequential loop path (``mesh=None`` — every format has it via the
+  registry-generic `FormatSpec.shard` / `shard_runner` seam), and
+* the `shard_map` + psum collective path on a real multi-device mesh
+  (the four kernel-backed packed types), using the 8-host-device
+  fixture from conftest.
+
+Bit-identity holds because a shard's kernel is exactly the
+single-device kernel on its row block (decode is lossless; each row
+accumulates in column order independent of its neighbours) and the
+psum adds the true row values to zeros.  Formats auto-discover from
+`repro.sparse.registry.iter_formats` — a newly registered spec joins
+this sweep with zero edits here, exactly like the single-device
+conformance suite.
+"""
+
+import numpy as np
+import pytest
+from test_spmv_conformance import CORPUS
+
+from repro.kernels import ops, shard_ops
+from repro.sparse.formats import CSR
+from repro.sparse.registry import get_format, iter_formats
+from repro.sparse.shard import shard_boundaries
+
+SHARDS = (1, 2, 4)
+BATCHES = (1, 8)
+CASES = ("empty_rows", "powerlaw", "regular")
+
+
+def _format_names():
+    return [spec.name for spec in iter_formats()]
+
+
+def _case(name, dtype=np.float64):
+    return CSR.from_dense(CORPUS[name]().astype(dtype))
+
+
+def _rhs(a, b, dtype=np.float64):
+    rng = np.random.default_rng(42)
+    return rng.standard_normal((a.shape[1], b)).astype(dtype)
+
+
+def _reference(spec, a, x):
+    """Single-device truth: the format's own packed artifact through
+    its own (spmv at B == 1, spmm otherwise) runner."""
+    kn = spec.conformance_knobs
+    packed = spec.pack(a, **kn)
+    if x.shape[1] == 1:
+        y = np.asarray(spec.runner(packed, x[:, 0])())
+        return y.reshape(-1)[:a.shape[0]][:, None]
+    return np.asarray(spec.spmm_runner(packed, x)()
+                      ).reshape(-1, x.shape[1])[:a.shape[0]]
+
+
+@pytest.mark.parametrize("batch", BATCHES, ids=[f"B{b}" for b in BATCHES])
+@pytest.mark.parametrize("n_shards", SHARDS,
+                         ids=[f"S{k}" for k in SHARDS])
+@pytest.mark.parametrize("fmt", _format_names())
+@pytest.mark.parametrize("case", CASES)
+def test_sharded_loop_bit_identical(case, fmt, n_shards, batch):
+    """Sequential loop path (no mesh): every format, exact equality."""
+    spec = get_format(fmt)
+    a = _case(case)
+    x = _rhs(a, batch)
+    ref = _reference(spec, a, x)
+    plan = spec.shard(a, n_shards, **spec.conformance_knobs)
+    got = np.asarray(shard_ops.shard_spmm(plan, x))
+    assert got.shape == ref.shape
+    assert np.array_equal(got, ref), (
+        f"{fmt} sharded loop diverges from the single-device kernel "
+        f"at shards={n_shards} B={batch}")
+    if batch == 1:
+        gotv = np.asarray(shard_ops.shard_spmv(plan, x[:, 0]))
+        assert np.array_equal(gotv, ref[:, 0])
+
+
+@pytest.mark.parametrize("batch", BATCHES, ids=[f"B{b}" for b in BATCHES])
+@pytest.mark.parametrize("n_shards", (2, 4),
+                         ids=["S2", "S4"])
+@pytest.mark.parametrize("fmt", _format_names())
+@pytest.mark.parametrize("case", CASES)
+def test_sharded_mesh_bit_identical(case, fmt, n_shards, batch,
+                                    make_model_mesh):
+    """shard_map + psum path on a real k-device mesh: every format with
+    a collective-path adapter, exact equality (shards=1 needs no mesh —
+    it IS the single-device path)."""
+    spec = get_format(fmt)
+    a = _case(case)
+    plan = spec.shard(a, n_shards, **spec.conformance_knobs)
+    if not shard_ops.supports_shard_map(plan):
+        pytest.skip(f"{fmt} has no shard_map adapter (loop path only)")
+    mesh = make_model_mesh(n_shards)
+    x = _rhs(a, batch)
+    ref = _reference(spec, a, x)
+    got = np.asarray(shard_ops.shard_spmm(plan, x, mesh=mesh))
+    assert np.array_equal(got, ref), (
+        f"{fmt} shard_map path diverges from the single-device kernel "
+        f"at shards={n_shards} B={batch}")
+
+
+@pytest.mark.parametrize("n_shards", SHARDS,
+                         ids=[f"S{k}" for k in SHARDS])
+def test_ops_mesh_knob_bit_identical(n_shards, make_model_mesh):
+    """`ops.spmv`/`ops.spmm` with the mesh=/n_shards= knobs equal their
+    single-device selves exactly — the public entry-point contract."""
+    from repro.core.csr_dtans import encode_matrix
+    a = _case("powerlaw")
+    mat = encode_matrix(a, lane_width=16)
+    x = _rhs(a, 8)
+    kw = ({"mesh": make_model_mesh(n_shards)} if n_shards > 1
+          else {"n_shards": 1})
+    assert np.array_equal(np.asarray(ops.spmm(mat, x, **kw)),
+                          np.asarray(ops.spmm(mat, x)))
+    assert np.array_equal(np.asarray(ops.spmv(mat, x[:, 0], **kw)),
+                          np.asarray(ops.spmv(mat, x[:, 0])))
+
+
+def test_ops_shard_plan_cached_on_object():
+    """Repeat sharded calls reuse the plan (one re-encode per shard
+    count, like the packed-artifact cache)."""
+    from repro.core.csr_dtans import encode_matrix
+    a = _case("regular")
+    mat = encode_matrix(a, lane_width=16)
+    p1 = ops.get_shard_plan(mat, 2)
+    p2 = ops.get_shard_plan(mat, 2)
+    assert p1 is p2
+    assert ops.get_shard_plan(mat, 4) is not p1
+
+
+def test_mesh_shard_mismatch_raises(make_model_mesh):
+    """A plan built for k shards refuses a mesh with a different model
+    axis instead of silently mis-sharding."""
+    spec = get_format("dtans")
+    a = _case("regular")
+    plan = spec.shard(a, 2, **spec.conformance_knobs)
+    mesh = make_model_mesh(4)
+    with pytest.raises(ValueError, match="model axis"):
+        shard_ops.shard_spmm(plan, _rhs(a, 2), mesh=mesh)
+
+
+def test_all_zero_matrix_all_shards():
+    """The all-zero matrix (rows with no nonzeros) shards at every
+    count and reproduces the zero result."""
+    spec = get_format("dtans")
+    a = _case("empty")              # 20 x 30, zero nonzeros
+    for k in SHARDS:
+        plan = spec.shard(a, k, **spec.conformance_knobs)
+        got = np.asarray(shard_ops.shard_spmm(plan, _rhs(a, 3)))
+        assert got.shape == (a.shape[0], 3)
+        assert not got.any()
+
+
+def test_zero_row_matrix_all_shards():
+    """The genuinely 0-row matrix shards legally at every count (all
+    shards empty) and returns the (0, B) result."""
+    spec = get_format("dtans")
+    a = CSR(indptr=np.zeros(1, np.int64), indices=np.zeros(0, np.int64),
+            values=np.zeros(0, np.float64), shape=(0, 30))
+    for k in SHARDS:
+        assert shard_boundaries(0, k) == (0,) * (k + 1)
+        plan = spec.shard(a, k, **spec.conformance_knobs)
+        got = np.asarray(shard_ops.shard_spmm(plan, _rhs(a, 3)))
+        assert got.shape == (0, 3)

@@ -1,0 +1,152 @@
+"""Regression coverage for the `launch.sharding.ShardingRules`
+divisibility guard: a dim that does not divide its mesh axis must stay
+REPLICATED (spec entry None) rather than producing a PartitionSpec that
+fails to lower — the contract the module docstring states but nothing
+previously tested.  Covers the `_div` guard itself, `param_spec` /
+`opt_spec` on non-dividing dims, the `dp_only` folding branch, and the
+fsdp-threshold (`should_fsdp`) branch, on real 8-host-device meshes
+from the conftest fixture's XLA flag.
+"""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.sharding import (FSDP_PARAM_THRESHOLD, ShardingRules,
+                                   _div, should_fsdp)
+from repro.models.config import ArchConfig
+
+
+def _mesh(shape, axes):
+    n = int(np.prod(shape))
+    if len(jax.devices()) < n:
+        pytest.skip(f"needs {n} host devices")
+    return Mesh(np.asarray(jax.devices()[:n]).reshape(shape), axes)
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=2, d_model=64,
+                n_heads=8, n_kv_heads=8, d_ff=256, vocab=1000)
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+class _Key:
+    def __init__(self, key):
+        self.key = key
+
+
+def test_div_guard():
+    """The guard itself: only size > 1 AND exact divisibility shard."""
+    assert _div(64, 4)
+    assert not _div(63, 4)      # non-dividing dim
+    assert not _div(64, 1)      # trivial axis never shards
+    assert _div(0, 4)           # 0 % 4 == 0: (degenerate) divisible
+
+
+@pytest.mark.parametrize("d_model", [64, 63],
+                         ids=["dividing", "non-dividing"])
+def test_param_spec_divisibility(d_model):
+    """head weight (d_model, vocab): the model-axis entry appears only
+    when vocab divides the model axis; a non-dividing dim is replicated
+    (None), never a lowering error."""
+    mesh = _mesh((2, 4), ("data", "model"))
+    vocab = 1000 if d_model == 64 else 1001   # 1001 % 4 != 0
+    cfg = _cfg(d_model=d_model, vocab=vocab)
+    rules = ShardingRules(cfg, mesh, fsdp=False)
+    leaf = jax.ShapeDtypeStruct((d_model, vocab), np.float32)
+    spec = rules.param_spec((_Key("head"),), leaf)
+    if vocab % 4 == 0:
+        assert spec == P(None, "model")
+    else:
+        assert spec == P(None, None)
+    # the spec must lower against the mesh regardless
+    jax.sharding.NamedSharding(mesh, spec)
+
+
+def test_param_spec_fsdp_divisibility():
+    """FSDP dim-0 sharding also guards: dim 0 not dividing the data
+    axis stays replicated while the TP dim still shards."""
+    mesh = _mesh((4, 2), ("data", "model"))
+    rules = ShardingRules(_cfg(), mesh, fsdp=True)
+    ok = jax.ShapeDtypeStruct((64, 128), np.float32)       # 64 % 4 == 0
+    bad = jax.ShapeDtypeStruct((63, 128), np.float32)      # 63 % 4 != 0
+    assert rules.param_spec((_Key("wq"),), ok) == P("data", "model")
+    assert rules.param_spec((_Key("wq"),), bad) == P(None, "model")
+
+
+def test_dp_only_folds_model_axis():
+    """dp_only: msize collapses to 1 so NO weight dim ever takes the
+    model axis (everything tensor-parallel becomes replicated), fsdp is
+    forced off, and the batch folds the model axis into data
+    parallelism."""
+    mesh = _mesh((2, 4), ("data", "model"))
+    rules = ShardingRules(_cfg(), mesh, dp_only=True)
+    assert rules.msize == 1 and rules.fsdp is False
+    leaf = jax.ShapeDtypeStruct((64, 64), np.float32)
+    assert rules.param_spec((_Key("wq"),), leaf) == P(None, None)
+    # batch of 8 = 2 (data) x 4 (model): dp_only folds both axes
+    assert rules.batch_axis(8) == ("data", "model")
+    # without dp_only the same batch splits over data alone
+    assert ShardingRules(_cfg(), mesh, fsdp=False).batch_axis(8) == "data"
+
+
+def test_batch_axis_non_dividing_batch_replicates():
+    """A global batch no candidate axis set divides stays replicated
+    (None) — e.g. batch=1 on a multi-chip mesh."""
+    mesh = _mesh((2, 4), ("data", "model"))
+    rules = ShardingRules(_cfg(), mesh, fsdp=False)
+    assert rules.batch_axis(1) is None
+    assert rules.batch_axis(3) is None
+
+
+def test_fsdp_threshold_branches():
+    """`should_fsdp` flips exactly on the analytic parameter estimate
+    crossing FSDP_PARAM_THRESHOLD, and ShardingRules honors it as the
+    fsdp default."""
+    small = _cfg()                       # ~ hundreds of k params
+    big = _cfg(n_layers=80, d_model=16384, n_heads=128, n_kv_heads=8,
+               d_ff=53248, vocab=128256)   # 405B-scale head
+    assert not should_fsdp(small)
+    assert should_fsdp(big)
+    assert FSDP_PARAM_THRESHOLD == 10e9
+    mesh = _mesh((2, 4), ("data", "model"))
+    assert ShardingRules(small, mesh).fsdp is False
+    assert ShardingRules(big, mesh).fsdp is True
+    # dp_only overrides even an above-threshold config
+    assert ShardingRules(big, mesh, dp_only=True).fsdp is False
+
+
+def test_opt_spec_zero1_divisibility():
+    """ZeRO-1 optimizer sharding takes dim 0 only when free AND
+    divisible; otherwise the param spec passes through untouched."""
+    mesh = _mesh((4, 2), ("data", "model"))
+    rules = ShardingRules(_cfg(), mesh, fsdp=False, zero1=True)
+    assert rules.opt_spec(P(None, "model"), (64, 128)) == \
+        P("data", "model")
+    assert rules.opt_spec(P(None, "model"), (63, 128)) == \
+        P(None, "model")                       # 63 % 4 != 0: replicated
+    assert rules.opt_spec(P("model", None), (64, 128)) == \
+        P("model", None)                       # dim 0 taken: untouched
+
+
+def test_params_pspecs_lower_on_mesh():
+    """End to end: a small param tree with deliberately non-dividing
+    dims produces specs that all lower into NamedShardings."""
+    mesh = _mesh((2, 4), ("data", "model"))
+    cfg = _cfg(vocab=1001)
+    rules = ShardingRules(cfg, mesh, fsdp=False)
+    tree = {"tok": jax.ShapeDtypeStruct((1001, 63), np.float32),
+            "layers": {"wq": jax.ShapeDtypeStruct((2, 63, 63),
+                                                  np.float32)}}
+    specs = rules.params_pspecs(tree)
+    named = rules.named(specs)
+    flat = jax.tree.leaves(named,
+                           is_leaf=lambda x: hasattr(x, "spec"))
+    assert all(hasattr(s, "spec") for s in flat)
+    # non-dividing dims everywhere -> fully replicated specs
+    leaves = jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, P))
+    assert sorted(leaves, key=len) == [P(None, None),
+                                       P(None, None, None)]
