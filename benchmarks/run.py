@@ -21,6 +21,11 @@ Prints ``name,us_per_call,derived`` CSV.
             step latency, occupancy, obs-layer overhead); writes
             ``--bench-serving-json`` (default: BENCH_serving.json at
             the repo root — the tracked perf trajectory)
+  tiles   — kernel tile/pipeline microbench (fig9tile rows): grid-
+            blocked SpMM best-tile-config vs untiled over a batch
+            sweep, fused BCSR-dtANS block-decode vs the generic
+            gather path, pipelined decode vs serial — every row
+            carries a bit_identical flag the tile-smoke CI leg gates on
   roofline— summary of the dry-run roofline table when present
 
 ``--only`` accepts a comma-separated list (``--only fig9,batch``) so
@@ -67,8 +72,9 @@ def main() -> None:
 
     from benchmarks import (bench_batch_selection, bench_calibration,
                             bench_compression, bench_delta_entropy,
-                            bench_format_selection, bench_serving_load,
-                            bench_shard_selection, bench_spmv)
+                            bench_format_selection, bench_kernel_tiles,
+                            bench_serving_load, bench_shard_selection,
+                            bench_spmv)
 
     print("name,us_per_call,derived")
     sections = {
@@ -84,6 +90,7 @@ def main() -> None:
         "shard": lambda: bench_shard_selection.run(small=args.small),
         "calib": lambda: bench_calibration.run(
             small=args.small, profile_json=args.profile_json),
+        "tiles": lambda: bench_kernel_tiles.run(small=args.small),
         "load": lambda: bench_serving_load.run(
             small=args.small,
             bench_json=args.bench_serving_json

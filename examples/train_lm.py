@@ -1,6 +1,11 @@
 """End-to-end training driver: train a ~100M-param SmolLM-family model for
 a few hundred steps on the synthetic pipeline, with checkpointing and an
 injected mid-run failure + automatic restore (fault-tolerance demo).
+After training, the tied LM head is swapped for a pruned, entropy-coded
+`SparseLinear` and the eval loss recomputed with every hidden state of a
+training-shaped batch (B = batch * seq rows) contracted through the
+grid-blocked SpMM kernel in ONE decode pass — the paper's serving story
+exercised at training batch shapes.
 
 Full run (~100M params, few hundred steps — minutes on real hardware,
 hours on this 1-core CPU container):
@@ -13,9 +18,63 @@ CI-sized run (default here):
 import argparse
 import shutil
 
+import numpy as np
+
 from repro.configs import get, get_smoke
 from repro.data.pipeline import PipelineConfig, SyntheticTokens
 from repro.train.trainer import TrainConfig, Trainer
+
+
+def masked_ce(logits, targets, mask=None):
+    """Masked next-token cross entropy over (B, S, V) logits — the
+    `repro.models.api.loss_fn` formula, reusable with logits from any
+    head (dense or sparse)."""
+    import jax
+    import jax.numpy as jnp
+    logits = jnp.asarray(logits, jnp.float32)
+    targets = jnp.asarray(targets)
+    if mask is None:
+        mask = jnp.ones_like(targets, dtype=jnp.float32)
+    mask = jnp.asarray(mask, jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                    logits.ndim - 1)
+    gold = jnp.sum(jnp.where(iota == targets[..., None], logits, 0.0),
+                   axis=-1)
+    return float(((logz - gold) * mask).sum()
+                 / jnp.maximum(mask.sum(), 1.0))
+
+
+def sparse_head_eval(params, cfg, batch, *, sparsity: float = 0.5,
+                     value_bits: int = 8, pipeline: bool = False):
+    """Eval loss with the tied unembed replaced by a compressed head.
+
+    The (d_model, vocab) unembed (`params["embed"]["tok"].T`) is
+    magnitude-pruned, codebook-quantized and CSR-dtANS-encoded into a
+    `repro.serving.SparseLinear`; the model's hidden states for the
+    whole batch flatten to a training-shaped RHS pool of B * S rows and
+    contract through `ops.spmm` — which column-tiles the pool through
+    the grid-blocked kernel when it overflows the VMEM budget.
+
+    Returns ``(dense_loss, sparse_loss, head)``; the two losses agree
+    to the compression error (exactly at sparsity=0, value_bits high),
+    and the sparse logits are bit-identical whether or not the pool is
+    column-tiled (the tiling contract, conformance-pinned).
+    """
+    from repro.models import api
+    from repro.serving.sparse_linear import SparseLinear
+    hidden, _ = api.forward_hidden(params, cfg, batch)
+    ep = params["embed"]                              # tied or untied head
+    w = np.asarray(ep["head"] if "head" in ep else
+                   np.asarray(ep["tok"]).T)           # (d_model, vocab)
+    head = SparseLinear.from_dense(w, sparsity=sparsity,
+                                   value_bits=value_bits)
+    logits = head.apply(np.asarray(hidden, np.float32),
+                        pipeline=pipeline)            # (B, S, vocab)
+    dense = masked_ce(api.forward(params, cfg, batch)[0],
+                      batch["targets"], batch.get("mask"))
+    sparse = masked_ce(logits, batch["targets"], batch.get("mask"))
+    return dense, sparse, head
 
 
 def main():
@@ -27,6 +86,9 @@ def main():
                     help="inject a crash at this step (fault-tolerance "
                          "demo); run resumes from the last checkpoint")
     ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--head-sparsity", type=float, default=0.5,
+                    help="prune fraction of the compressed LM head "
+                         "evaluated after training")
     args = ap.parse_args()
 
     if args.tiny:
@@ -62,6 +124,17 @@ def main():
     print("training loss decreased: OK")
     if trainer.straggler_steps:
         print(f"straggler steps detected: {trainer.straggler_steps}")
+
+    # Serving story at training shapes: swap the tied unembed for a
+    # compressed SparseLinear and re-score one training batch — all
+    # batch * seq hidden rows decode-and-contract in one blocked SpMM
+    # pass.
+    eval_batch = pipe.batch(trainer.step)
+    dense, sparse, head = sparse_head_eval(
+        trainer.params, cfg, eval_batch, sparsity=args.head_sparsity)
+    print(f"sparse head: {head.compression_vs_dense:.1f}x vs dense "
+          f"({head.compressed_bytes} B), pool B={batch * seq}")
+    print(f"eval loss: dense-head {dense:.4f}  sparse-head {sparse:.4f}")
 
 
 if __name__ == "__main__":

@@ -74,6 +74,13 @@ class MachineModel:
     # latency.
     ici_bw: float = 9e10             # bytes/s per device, ring collective
     collective_latency: float = 1e-6  # seconds per collective hop
+    # VMEM capacity available to one kernel program — the budget
+    # `repro.kernels.tiling.choose_bn` tiles the RHS against.  When a
+    # batch's x/y columns exceed it, the pass splits into column tiles
+    # and the matrix stream (and its decode) is re-read once per tile:
+    # the capacity term `spmm_bytes` / `work_time` charge via
+    # ``col_tiles``.
+    vmem_bytes: float = float(16 * 2 ** 20)
 
     def signature(self) -> str:
         """Cache-key component: the *constants*, not just the name, so
@@ -82,7 +89,7 @@ class MachineModel:
                 f"{self.cache_bytes:g}:{self.vpu_rate:g}:"
                 f"{self.decode_ops_per_nnz:g}:{self.spmv_ops_per_elem:g}:"
                 f"{self.row_seq_penalty:g}:{self.ici_bw:g}:"
-                f"{self.collective_latency:g}")
+                f"{self.collective_latency:g}:{self.vmem_bytes:g}")
 
     def to_dict(self) -> dict:
         """JSON form — the payload of a persisted machine profile
@@ -130,12 +137,19 @@ V5E = MachineModel()
 
 
 def spmm_bytes(fmt_bytes: int, n: int, m: int, vbytes: int,
-               batch: int = 1) -> int:
+               batch: int = 1, col_tiles: int = 1) -> int:
     """Bytes moved by one multi-RHS SpMM pass: the matrix (and for the
     entropy formats, its one decode) is paid ONCE, while the x and y
     vectors are paid per right-hand side — the amortization that lets a
-    compressed format win at batch sizes where it loses at B=1."""
-    return fmt_bytes + batch * (n + m) * vbytes
+    compressed format win at batch sizes where it loses at B=1.
+
+    ``col_tiles > 1`` is the VMEM-capacity term: when the batch's x/y
+    columns overflow `MachineModel.vmem_bytes`, the grid-blocked kernel
+    (`repro.kernels.tiling`) splits the RHS into column tiles and
+    re-reads the matrix stream once per tile, so the format bytes are
+    charged ``col_tiles`` times while the x/y traffic is unchanged
+    (each column still moves exactly once)."""
+    return fmt_bytes * max(int(col_tiles), 1) + batch * (n + m) * vbytes
 
 
 def spmv_bytes(fmt_bytes: int, n: int, m: int, vbytes: int) -> int:
@@ -158,16 +172,20 @@ def model_time(bytes_moved: int, nnz: int, *, warm: bool, decode: bool,
 
 
 def work_time(terms: CostTerms, machine: MachineModel = V5E,
-              batch: int = 1) -> float:
+              batch: int = 1, col_tiles: int = 1) -> float:
     """Seconds of kernel compute for one `FormatSpec.cost_terms` split.
 
     The contraction terms (``lockstep``/``rowseq``) scale with the
     number of right-hand sides; the ``decode`` term does not — the
     fused SpMM kernels decode each segment once and contract it against
-    all B columns, so entropy-decode overhead amortizes with batch."""
+    all B columns, so entropy-decode overhead amortizes with batch.
+    The amortization is bounded by VMEM capacity: a pass split into
+    ``col_tiles`` column tiles re-decodes the stream once per tile
+    (`spmm_bytes` charges the matching byte term)."""
     ops = ((terms.lockstep + terms.rowseq * machine.row_seq_penalty)
            * machine.spmv_ops_per_elem * batch
-           + terms.decode * machine.decode_ops_per_nnz)
+           + terms.decode * machine.decode_ops_per_nnz
+           * max(int(col_tiles), 1))
     return ops / machine.vpu_rate
 
 
@@ -230,6 +248,7 @@ def candidate_time(fp: Fingerprint, fmt: str, nbytes: int, *, warm: bool,
     selector and oracle cannot drift apart. Knobs the format does not
     declare are ignored, so callers may pass a candidate's full knob
     set."""
+    from repro.kernels.tiling import n_col_tiles
     spec = get_format(fmt)
     terms = spec.cost_terms(fp, **spec.filter_knobs(knobs))
     k = max(int(n_shards), 1)
@@ -238,10 +257,15 @@ def candidate_time(fp: Fingerprint, fmt: str, nbytes: int, *, warm: bool,
         terms = CostTerms(lockstep=terms.lockstep / k,
                           rowseq=terms.rowseq / k,
                           decode=terms.decode / k)
+    # VMEM-capacity tile count of the grid-blocked kernel: how many
+    # column tiles the batch's x/y working set forces, hence how many
+    # times the matrix stream is re-read and re-decoded.
+    tiles = n_col_tiles(fp.cols, 0, max(int(batch), 1), fp.value_bytes,
+                        machine.vmem_bytes)
     return (memory_time(spmm_bytes(nbytes, fp.cols, fp.rows,
-                                   fp.value_bytes, batch),
+                                   fp.value_bytes, batch, tiles),
                         warm=warm, machine=machine)
-            + work_time(terms, machine, batch)
+            + work_time(terms, machine, batch, tiles)
             + collective_time(k, rows=fp.rows, cols=fp.cols,
                               vbytes=fp.value_bytes, batch=batch,
                               machine=machine))

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.kernels.tiling import blocked_spmm
 from repro.sparse.bcsr import BCSR
 
 
@@ -105,24 +106,22 @@ def _bcsr_spmm_kernel(col_ref, val_ref, x_ref, y_ref):
     y_ref[0, :, :] = jnp.sum(contrib, axis=(0, 2))         # (r, B)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def bcsr_spmm_pallas(block_cols, val, x, interpret=True):
+@functools.partial(jax.jit, static_argnames=("interpret", "bn",
+                                             "tile_mode"))
+def bcsr_spmm_pallas(block_cols, val, x, interpret=True, bn=None,
+                     tile_mode="auto"):
     """Multi-RHS BCSR kernel: x is (n, B); returns (S, r, B) — each
-    dense tile is gathered once and contracted against all B columns."""
+    dense tile is gathered once and contracted against all B columns.
+    ``bn`` column-tiles the B axis (`repro.kernels.tiling`); blocked
+    output is bitwise equal to the untiled kernel."""
     S, W, r, c = val.shape
-    n, B = x.shape
-    return pl.pallas_call(
-        _bcsr_spmm_kernel,
-        grid=(S,),
-        in_specs=[
-            pl.BlockSpec((1, W), lambda s: (s, 0)),
-            pl.BlockSpec((1, W, r, c), lambda s: (s, 0, 0, 0)),
-            pl.BlockSpec((n, B), lambda s: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, r, B), lambda s: (s, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((S, r, B), val.dtype),
-        interpret=interpret,
-    )(block_cols, val, x)
+    mat_specs = [
+        ((1, W), lambda s: (s, 0)),
+        ((1, W, r, c), lambda s: (s, 0, 0, 0)),
+    ]
+    return blocked_spmm(_bcsr_spmm_kernel, (block_cols, val), mat_specs,
+                        x, rows=r, out_dtype=val.dtype, grid_s=S, bn=bn,
+                        tile_mode=tile_mode, interpret=interpret)
 
 
 def bcsr_spmv_ref(block_cols: np.ndarray, val: np.ndarray, x: np.ndarray):

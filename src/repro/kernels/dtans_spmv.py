@@ -17,6 +17,32 @@ lookups, x[col]) are `jnp.take` over VMEM-resident blocks — the TPU
 equivalent of the paper's shared-memory lookups + coalesced loads
 (DESIGN.md §2 spells out the mapping and its costs).
 
+Three static knobs grow the PR-5 kernels into the blocked/fused/
+pipelined execution layer (docs/kernels.md has the full contract):
+
+* ``shared_cols`` — the fused BCSR-dtANS contraction.  A block-filled
+  encode (BCSR-dtANS at lane_width == r) gives every in-bounds lane of
+  a slice the SAME column sequence, so the kernel gathers x once per
+  decoded cell from lane 0's columns (``cols[:, 0]``) and broadcasts
+  the ``(h, B)`` tile across the r lanes — an r x cut in gather traffic
+  versus the generic ``(h, L, B)`` gather.  The contraction stays in
+  multiply-where-sum form (NOT `lax.dot_general`, whose reduction tree
+  differs in the last ulp), so fused output is bitwise identical to the
+  generic path.
+* ``pipeline`` — decode/contract overlap (the SMASH co-design point):
+  the loop body decodes segment ``j+1`` BEFORE contracting segment
+  ``j``, so the next segment's stream claims and table gathers have no
+  data dependence on the in-flight contraction and can overlap it
+  (software pipelining; Mosaic/the VLIW scheduler interleaves the two
+  issue streams).  The contraction order per column is unchanged —
+  bit-identical to the serial loop.  The prologue decodes segment 0;
+  the final body iteration decodes one segment past the end, which is
+  masked to a no-op (``segment_step`` is inactive-safe).
+* ``bn`` — column tiling of the SpMM wrapper via
+  `repro.kernels.tiling.blocked_spmm` (2-D ``(s, j)`` grid compiled,
+  `lax.map` column loop in interpret mode), so x/y need never be VMEM-
+  resident whole.
+
 Validated with ``interpret=True`` (this container is CPU-only); the target
 is TPU v5e. 64-bit lane arithmetic lowers to 32-bit pairs on TPU — the
 native-width variant is a recorded perf iteration, not a correctness issue.
@@ -33,11 +59,45 @@ from jax.experimental import pallas as pl
 from repro.core.params import DtansParams
 from repro.kernels.common import (DecodeArrays, bits_to_value, init_state,
                                   segment_step)
+from repro.kernels.tiling import blocked_spmm
+
+
+def _decode_contract(arr, params, pattern, max_nseg, acc0, contract,
+                     pipeline: bool):
+    """The shared decode loop: serial (decode j, contract j) or
+    software-pipelined (decode j+1, then contract j — the decode of the
+    next segment issues with no data dependence on the contraction in
+    flight).  Contraction order is identical either way."""
+    state = init_state(arr, params)
+    if not pipeline:
+        def body(j, carry):
+            state, acc = carry
+            state, cols, vbits, valid = segment_step(j, state, arr,
+                                                     params, pattern)
+            return state, contract(cols, vbits, valid, acc)
+
+        _, acc = jax.lax.fori_loop(0, max_nseg, body, (state, acc0))
+        return acc
+
+    state, cols, vbits, valid = segment_step(0, state, arr, params,
+                                             pattern)
+
+    def body(j, carry):
+        state, seg, acc = carry
+        nstate, ncols, nvbits, nvalid = segment_step(j + 1, state, arr,
+                                                     params, pattern)
+        acc = contract(*seg, acc)
+        return nstate, (ncols, nvbits, nvalid), acc
+
+    _, _, acc = jax.lax.fori_loop(0, max_nseg, body,
+                                  (state, (cols, vbits, valid), acc0))
+    return acc
 
 
 def _spmv_kernel(stream_ref, esc_ref, ns_ref, nnz_ref, sym_ref, dig_ref,
                  base_ref, isesc_ref, x_ref, y_ref, *, params: DtansParams,
-                 pattern: tuple, max_nseg: int, out_dtype):
+                 pattern: tuple, max_nseg: int, out_dtype,
+                 pipeline: bool = False, shared_cols: bool = False):
     arr = DecodeArrays(
         stream=stream_ref[0, :],
         esc=esc_ref[:, 0, :],
@@ -50,32 +110,38 @@ def _spmv_kernel(stream_ref, esc_ref, ns_ref, nnz_ref, sym_ref, dig_ref,
     )
     x = x_ref[...]
     n = x.shape[0]
-    state = init_state(arr, params)
     acc0 = jnp.zeros((arr.ns.shape[0],), dtype=out_dtype)
 
-    def body(j, carry):
-        state, acc = carry
-        state, cols, vbits, valid = segment_step(j, state, arr, params,
-                                                 pattern)
+    def contract(cols, vbits, valid, acc):
         vals = bits_to_value(vbits, out_dtype)
-        xg = jnp.take(x, jnp.clip(cols, 0, n - 1), axis=0)
-        return state, acc + jnp.sum(jnp.where(valid, vals * xg, 0), axis=0)
+        if shared_cols:
+            # Block-filled encode: all in-bounds lanes share lane 0's
+            # columns — gather once, broadcast across the r lanes.
+            xg = jnp.take(x, jnp.clip(cols[:, 0], 0, n - 1), axis=0)
+            contrib = jnp.where(valid, vals * xg[:, None], 0)
+        else:
+            xg = jnp.take(x, jnp.clip(cols, 0, n - 1), axis=0)
+            contrib = jnp.where(valid, vals * xg, 0)
+        return acc + jnp.sum(contrib, axis=0)
 
-    _, acc = jax.lax.fori_loop(0, max_nseg, body, (state, acc0))
-    y_ref[0, :] = acc
+    y_ref[0, :] = _decode_contract(arr, params, pattern, max_nseg, acc0,
+                                   contract, pipeline)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "params", "pattern", "max_nseg", "lane_width", "out_dtype", "interpret"))
+    "params", "pattern", "max_nseg", "lane_width", "out_dtype",
+    "interpret", "pipeline", "shared_cols"))
 def dtans_spmv_pallas(stream, esc, ns, nnz, tabs, x, *, params, pattern,
-                      max_nseg, lane_width, out_dtype, interpret=True):
+                      max_nseg, lane_width, out_dtype, interpret=True,
+                      pipeline=False, shared_cols=False):
     """pallas_call wrapper: returns per-slice row results (S, L)."""
     S, Wmax = stream.shape
     T, _, Emax = esc.shape
     K = params.K
     n = x.shape[0]
     kernel = functools.partial(_spmv_kernel, params=params, pattern=pattern,
-                               max_nseg=max_nseg, out_dtype=out_dtype)
+                               max_nseg=max_nseg, out_dtype=out_dtype,
+                               pipeline=pipeline, shared_cols=shared_cols)
     return pl.pallas_call(
         kernel,
         grid=(S,),
@@ -98,7 +164,8 @@ def dtans_spmv_pallas(stream, esc, ns, nnz, tabs, x, *, params, pattern,
 
 def _spmm_kernel(stream_ref, esc_ref, ns_ref, nnz_ref, sym_ref, dig_ref,
                  base_ref, isesc_ref, x_ref, y_ref, *, params: DtansParams,
-                 pattern: tuple, max_nseg: int, out_dtype):
+                 pattern: tuple, max_nseg: int, out_dtype,
+                 pipeline: bool = False, shared_cols: bool = False):
     """Fused decode + multi-RHS contraction: decode each segment ONCE,
     contract it against all B columns of x before the next segment —
     the amortization the batched cost model prices (decode work is per
@@ -115,48 +182,58 @@ def _spmm_kernel(stream_ref, esc_ref, ns_ref, nnz_ref, sym_ref, dig_ref,
     )
     x = x_ref[...]                               # (n, B)
     n = x.shape[0]
-    state = init_state(arr, params)
     acc0 = jnp.zeros((arr.ns.shape[0], x.shape[1]), dtype=out_dtype)
 
-    def body(j, carry):
-        state, acc = carry
-        state, cols, vbits, valid = segment_step(j, state, arr, params,
-                                                 pattern)
+    def contract(cols, vbits, valid, acc):
         vals = bits_to_value(vbits, out_dtype)               # (h, L)
-        xg = jnp.take(x, jnp.clip(cols, 0, n - 1), axis=0)   # (h, L, B)
-        contrib = jnp.where(valid[..., None], vals[..., None] * xg, 0)
-        return state, acc + jnp.sum(contrib, axis=0)
+        if shared_cols:
+            # Fused BCSR-dtANS: one (h, B) gather from lane 0's columns
+            # feeds all r lanes of the block row (r x fewer gathers).
+            xg = jnp.take(x, jnp.clip(cols[:, 0], 0, n - 1),
+                          axis=0)                            # (h, B)
+            contrib = jnp.where(valid[..., None],
+                                vals[..., None] * xg[:, None, :], 0)
+        else:
+            xg = jnp.take(x, jnp.clip(cols, 0, n - 1),
+                          axis=0)                            # (h, L, B)
+            contrib = jnp.where(valid[..., None],
+                                vals[..., None] * xg, 0)
+        return acc + jnp.sum(contrib, axis=0)
 
-    _, acc = jax.lax.fori_loop(0, max_nseg, body, (state, acc0))
-    y_ref[0, :, :] = acc
+    y_ref[0, :, :] = _decode_contract(arr, params, pattern, max_nseg,
+                                      acc0, contract, pipeline)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "params", "pattern", "max_nseg", "lane_width", "out_dtype", "interpret"))
+    "params", "pattern", "max_nseg", "lane_width", "out_dtype",
+    "interpret", "bn", "tile_mode", "pipeline", "shared_cols"))
 def dtans_spmm_pallas(stream, esc, ns, nnz, tabs, x, *, params, pattern,
-                      max_nseg, lane_width, out_dtype, interpret=True):
-    """Multi-RHS pallas_call wrapper: x is (n, B); returns (S, L, B)."""
+                      max_nseg, lane_width, out_dtype, interpret=True,
+                      bn=None, tile_mode="auto", pipeline=False,
+                      shared_cols=False):
+    """Multi-RHS pallas_call wrapper: x is (n, B); returns (S, L, B).
+
+    ``bn`` tiles the B axis into column blocks (None = untiled single
+    tile, the PR-5 call); ``pipeline`` overlaps decode with
+    contraction; ``shared_cols`` runs the fused block-decode
+    contraction.  All three are bit-identity-preserving."""
     S, Wmax = stream.shape
     T, _, Emax = esc.shape
     K = params.K
-    n, B = x.shape
     kernel = functools.partial(_spmm_kernel, params=params, pattern=pattern,
-                               max_nseg=max_nseg, out_dtype=out_dtype)
-    return pl.pallas_call(
-        kernel,
-        grid=(S,),
-        in_specs=[
-            pl.BlockSpec((1, Wmax), lambda s: (s, 0)),      # stream slice
-            pl.BlockSpec((T, 1, Emax), lambda s: (0, s, 0)),  # escapes
-            pl.BlockSpec((1, lane_width), lambda s: (s, 0)),  # ns
-            pl.BlockSpec((1, lane_width), lambda s: (s, 0)),  # nnz
-            pl.BlockSpec((T, K), lambda s: (0, 0)),          # tab symbol
-            pl.BlockSpec((T, K), lambda s: (0, 0)),          # tab digit
-            pl.BlockSpec((T, K), lambda s: (0, 0)),          # tab base
-            pl.BlockSpec((T, K), lambda s: (0, 0)),          # tab is_esc
-            pl.BlockSpec((n, B), lambda s: (0, 0)),          # x (whole)
-        ],
-        out_specs=pl.BlockSpec((1, lane_width, B), lambda s: (s, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((S, lane_width, B), out_dtype),
-        interpret=interpret,
-    )(stream, esc, ns, nnz, *tabs, x)
+                               max_nseg=max_nseg, out_dtype=out_dtype,
+                               pipeline=pipeline, shared_cols=shared_cols)
+    mat_specs = [
+        ((1, Wmax), lambda s: (s, 0)),           # stream slice
+        ((T, 1, Emax), lambda s: (0, s, 0)),     # escapes
+        ((1, lane_width), lambda s: (s, 0)),     # ns
+        ((1, lane_width), lambda s: (s, 0)),     # nnz
+        ((T, K), lambda s: (0, 0)),              # tab symbol
+        ((T, K), lambda s: (0, 0)),              # tab digit
+        ((T, K), lambda s: (0, 0)),              # tab base
+        ((T, K), lambda s: (0, 0)),              # tab is_esc
+    ]
+    return blocked_spmm(kernel, (stream, esc, ns, nnz, *tabs), mat_specs,
+                        x, rows=lane_width, out_dtype=out_dtype,
+                        grid_s=S, bn=bn, tile_mode=tile_mode,
+                        interpret=interpret)

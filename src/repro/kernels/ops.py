@@ -30,6 +30,7 @@ import numpy as np
 
 from repro import obs
 from repro.core.csr_dtans import CSRdtANS
+from repro.kernels import tiling
 from repro.kernels.bcsr_spmv import (PackedBCSR, bcsr_spmm_pallas,
                                      bcsr_spmv_pallas)
 from repro.kernels.dtans_decode import dtans_decode_pallas
@@ -60,11 +61,20 @@ def _packed_nbytes(pm) -> int:
 
 
 def _record_pass(kind: str, pm, n: int, m: int, batch: int,
-                 itemsize: int, *, decodes: bool = False) -> None:
+                 itemsize: int, *, decodes: bool = False,
+                 col_tiles: int = 1) -> None:
     """One SpMV/SpMM pass into the default metrics registry: call and
     byte counters (matrix once per pass, x/y per RHS) plus the
     batch-size histogram. `spmm` entry points delegate B == 1 to their
-    spmv sibling, so exactly one record happens per pass."""
+    spmv sibling, so exactly one record happens per pass.
+
+    The byte counters are PER PASS, never per column tile: a blocked
+    pass (``col_tiles > 1``) records x/y bytes exactly once — each RHS
+    column still enters and leaves the chip once however the B axis is
+    tiled — so tiled and untiled runs of the same workload stay
+    byte-comparable.  The tile count itself lands in its own
+    histogram (the re-streamed matrix traffic a tiled pass pays is
+    what the cost model's ``col_tiles`` term prices)."""
     r = obs.default_registry()
     r.counter("kernels.spmm_calls").add(1)
     r.counter(f"kernels.{kind}_calls").add(1)
@@ -74,6 +84,25 @@ def _record_pass(kind: str, pm, n: int, m: int, batch: int,
     r.counter("kernels.x_bytes").add(n * batch * itemsize)
     r.counter("kernels.y_bytes").add(m * batch * itemsize)
     r.histogram("kernels.batch_size").observe(batch)
+    r.histogram("kernels.col_tiles").observe(col_tiles)
+
+
+def _resolve_bn(n: int, rows: int, batch: int, itemsize: int,
+                bn, vmem_budget) -> int | None:
+    """Effective column-tile width of one SpMM pass: an explicit ``bn``
+    wins (clamped to untiled when it covers the whole batch); otherwise
+    the VMEM-budget auto choice (`repro.kernels.tiling.choose_bn`,
+    ``vmem_budget=None`` = the default budget)."""
+    if bn is not None:
+        b = int(bn)
+        if b < 1:
+            raise ValueError(f"bn must be >= 1; got {bn}")
+        return None if b >= batch else b
+    return tiling.choose_bn(n, rows, batch, itemsize, vmem_budget)
+
+
+def _n_tiles(batch: int, bn: int | None) -> int:
+    return 1 if bn is None else -(-batch // bn)
 
 
 def out_dtype(pm: PackedMatrix):
@@ -132,7 +161,8 @@ def get_shard_plan(mat: CSRdtANS, n_shards: int):
     return plan
 
 
-def _sharded_dtans(mat, x, y, *, mesh, k, interpret, spmm: bool):
+def _sharded_dtans(mat, x, y, *, mesh, k, interpret, spmm: bool,
+                   bn=None, pipeline: bool = False):
     from repro.kernels import shard_ops
     if not isinstance(mat, CSRdtANS):
         raise TypeError(
@@ -140,23 +170,52 @@ def _sharded_dtans(mat, x, y, *, mesh, k, interpret, spmm: bool):
             "artifact carries no bitstream to re-partition); pass the "
             "matrix object or shards=1")
     plan = get_shard_plan(mat, k)
-    fn = shard_ops.shard_spmm if spmm else shard_ops.shard_spmv
-    return fn(plan, x, y=y, mesh=mesh, interpret=interpret)
+    if spmm:
+        return shard_ops.shard_spmm(plan, x, y=y, mesh=mesh,
+                                    interpret=interpret, bn=bn,
+                                    pipeline=pipeline)
+    return shard_ops.shard_spmv(plan, x, y=y, mesh=mesh,
+                                interpret=interpret, pipeline=pipeline)
+
+
+def _resolve_fused(pm: PackedMatrix, fused) -> bool:
+    """Whether this pass runs the shared-column (fused block-decode)
+    contraction: ``fused=None`` follows the pack's ``shared_cols``
+    flag (BCSR-dtANS encodes fuse, everything else doesn't);
+    ``fused=False`` forces the generic path (the benchmark comparator);
+    ``fused=True`` on a non-block-filled pack is an error — lanes with
+    distinct columns cannot share lane 0's gather."""
+    shared = bool(getattr(pm, "shared_cols", False))
+    if fused is None:
+        return shared
+    if fused and not shared:
+        raise ValueError(
+            "fused=True needs a block-filled (shared-column) pack — "
+            "only BCSR-dtANS encodes set PackedMatrix.shared_cols")
+    return bool(fused)
 
 
 def spmv(mat: CSRdtANS | PackedMatrix, x, y=None, *,
-         interpret: bool = True, mesh=None, n_shards=None) -> jax.Array:
+         interpret: bool = True, mesh=None, n_shards=None,
+         pipeline: bool = False, fused=None) -> jax.Array:
     """y = A x + y with on-the-fly dtANS decoding (fused Pallas kernel).
 
     With ``mesh=`` (model axis > 1) or ``n_shards= > 1`` the matrix is
     row-partitioned along decode-slice boundaries and each device
     decodes only its shard (`repro.kernels.shard_ops`); results stay
-    bit-identical to the single-device kernel."""
+    bit-identical to the single-device kernel.
+
+    ``pipeline=True`` overlaps each segment's decode with the previous
+    segment's contraction; ``fused`` selects the shared-column
+    block-decode contraction (default: the pack's own ``shared_cols``
+    flag).  Both preserve bit-identity (docs/kernels.md)."""
     k = _resolve_shards(mesh, n_shards)
     if k > 1:
         return _sharded_dtans(mat, x, y, mesh=mesh, k=k,
-                              interpret=interpret, spmm=False)
+                              interpret=interpret, spmm=False,
+                              pipeline=pipeline)
     pm = get_packed(mat) if isinstance(mat, CSRdtANS) else mat
+    shared = _resolve_fused(pm, fused)
     dt = _out_dtype(pm)
     m, n = pm.shape
     _record_pass("dtans_spmv", pm, n, m, 1, pm.dtype.itemsize,
@@ -166,7 +225,8 @@ def spmv(mat: CSRdtANS | PackedMatrix, x, y=None, *,
         jnp.asarray(pm.stream), jnp.asarray(pm.esc), jnp.asarray(pm.ns),
         jnp.asarray(pm.nnz), _tabs(pm), x,
         params=pm.params, pattern=pm.pattern, max_nseg=pm.max_nseg,
-        lane_width=pm.lane_width, out_dtype=dt, interpret=interpret)
+        lane_width=pm.lane_width, out_dtype=dt, interpret=interpret,
+        pipeline=pipeline, shared_cols=shared)
     out = acc.reshape(-1)[:m]
     if y is not None:
         out = out + jnp.asarray(y, dtype=dt)
@@ -193,16 +253,29 @@ def _empty_y(m: int, y, dt):
 
 
 def spmm(mat: CSRdtANS | PackedMatrix, x, y=None, *,
-         interpret: bool = True, mesh=None, n_shards=None) -> jax.Array:
+         interpret: bool = True, mesh=None, n_shards=None,
+         bn=None, vmem_budget=None, tile_mode: str = "auto",
+         pipeline: bool = False, fused=None) -> jax.Array:
     """Y = A X + Y, X: (n, B) — decode once, contract all B columns in
     the fused kernel. B == 1 runs the single-vector `spmv` kernel, so
     the results are bit-identical to it.  ``mesh=`` / ``n_shards=``
-    shard the rows across devices exactly as in `spmv`."""
+    shard the rows across devices exactly as in `spmv`.
+
+    Tiling knobs (docs/kernels.md): ``bn`` pins the column-tile width
+    (None = auto from ``vmem_budget``, untiled when the whole batch
+    fits); ``tile_mode`` picks the blocked schedule (``"grid"`` = 2-D
+    pallas grid, ``"loop"`` = lax.map column loop, ``"auto"`` = loop
+    under interpret / grid compiled); ``pipeline`` overlaps decode with
+    contraction; ``fused`` selects the shared-column block-decode
+    contraction.  Every combination is bit-identical to the untiled
+    serial kernel — the conformance suite pins them with exact ==."""
     k = _resolve_shards(mesh, n_shards)
     if k > 1:
         return _sharded_dtans(mat, x, y, mesh=mesh, k=k,
-                              interpret=interpret, spmm=True)
+                              interpret=interpret, spmm=True, bn=bn,
+                              pipeline=pipeline)
     pm = get_packed(mat) if isinstance(mat, CSRdtANS) else mat
+    shared = _resolve_fused(pm, fused)
     dt = _out_dtype(pm)
     m, n = pm.shape
     x = jnp.asarray(x, dtype=dt)
@@ -210,16 +283,22 @@ def spmm(mat: CSRdtANS | PackedMatrix, x, y=None, *,
     if x.shape[1] == 0:
         return _empty_y(m, y, dt)
     if x.shape[1] == 1:
-        out = spmv(pm, x[:, 0], interpret=interpret)[:, None]
+        out = spmv(pm, x[:, 0], interpret=interpret, pipeline=pipeline,
+                   fused=fused)[:, None]
     else:
-        _record_pass("dtans_spmm", pm, n, m, x.shape[1],
-                     pm.dtype.itemsize, decodes=True)
+        B = x.shape[1]
+        bn_eff = _resolve_bn(n, pm.lane_width, B, pm.dtype.itemsize,
+                             bn, vmem_budget)
+        _record_pass("dtans_spmm", pm, n, m, B, pm.dtype.itemsize,
+                     decodes=True, col_tiles=_n_tiles(B, bn_eff))
         acc = dtans_spmm_pallas(
             jnp.asarray(pm.stream), jnp.asarray(pm.esc), jnp.asarray(pm.ns),
             jnp.asarray(pm.nnz), _tabs(pm), x,
             params=pm.params, pattern=pm.pattern, max_nseg=pm.max_nseg,
-            lane_width=pm.lane_width, out_dtype=dt, interpret=interpret)
-        out = acc.reshape(-1, x.shape[1])[:m]
+            lane_width=pm.lane_width, out_dtype=dt, interpret=interpret,
+            bn=bn_eff, tile_mode=tile_mode, pipeline=pipeline,
+            shared_cols=shared)
+        out = acc.reshape(-1, B)[:m]
     if y is not None:
         out = out + jnp.asarray(y, dtype=dt)
     return out
@@ -256,10 +335,13 @@ def sell_spmv(ps: PackedSELL, x, y=None, *,
     return out
 
 
-def sell_spmm(ps: PackedSELL, x, y=None, *,
-              interpret: bool = True) -> jax.Array:
+def sell_spmm(ps: PackedSELL, x, y=None, *, interpret: bool = True,
+              bn=None, vmem_budget=None,
+              tile_mode: str = "auto") -> jax.Array:
     """Multi-RHS SELL: Y = A X + Y, X: (n, B). Shares the `spmm`
-    signature; B == 1 delegates to `sell_spmv` (bit-identical)."""
+    signature; B == 1 delegates to `sell_spmv` (bit-identical).
+    ``bn`` / ``vmem_budget`` / ``tile_mode`` column-tile the B axis
+    exactly as in `spmm` (bit-identical at every tile width)."""
     m, n = ps.shape
     x = jnp.asarray(x, dtype=ps.values.dtype)
     _check_rhs(x, n)
@@ -268,12 +350,17 @@ def sell_spmm(ps: PackedSELL, x, y=None, *,
     if x.shape[1] == 1:
         out = sell_spmv(ps, x[:, 0], interpret=interpret)[:, None]
     else:
-        _record_pass("sell_spmm", ps, n, m, x.shape[1],
-                     ps.values.dtype.itemsize)
+        B = x.shape[1]
+        bn_eff = _resolve_bn(n, ps.lane_width, B,
+                             ps.values.dtype.itemsize, bn, vmem_budget)
+        _record_pass("sell_spmm", ps, n, m, B,
+                     ps.values.dtype.itemsize,
+                     col_tiles=_n_tiles(B, bn_eff))
         acc = sell_spmm_pallas(jnp.asarray(ps.indices),
                                jnp.asarray(ps.values), x,
-                               interpret=interpret)
-        out = acc.reshape(-1, x.shape[1])[:m]
+                               interpret=interpret, bn=bn_eff,
+                               tile_mode=tile_mode)
+        out = acc.reshape(-1, B)[:m]
     if y is not None:
         out = out + jnp.asarray(y, dtype=out.dtype)
     return out
@@ -297,10 +384,13 @@ def rgcsr_spmv(pr: PackedRGCSR, x, y=None, *,
     return out
 
 
-def rgcsr_spmm(pr: PackedRGCSR, x, y=None, *,
-               interpret: bool = True) -> jax.Array:
+def rgcsr_spmm(pr: PackedRGCSR, x, y=None, *, interpret: bool = True,
+               bn=None, vmem_budget=None,
+               tile_mode: str = "auto") -> jax.Array:
     """Multi-RHS RGCSR: Y = A X + Y, X: (n, B). Shares the `spmm`
-    signature; B == 1 delegates to `rgcsr_spmv` (bit-identical)."""
+    signature; B == 1 delegates to `rgcsr_spmv` (bit-identical).
+    ``bn`` / ``vmem_budget`` / ``tile_mode`` column-tile the B axis
+    exactly as in `spmm` (bit-identical at every tile width)."""
     m, n = pr.shape
     x = jnp.asarray(x, dtype=pr.values.dtype)
     _check_rhs(x, n)
@@ -309,13 +399,18 @@ def rgcsr_spmm(pr: PackedRGCSR, x, y=None, *,
     if x.shape[1] == 1:
         out = rgcsr_spmv(pr, x[:, 0], interpret=interpret)[:, None]
     else:
-        _record_pass("rgcsr_spmm", pr, n, m, x.shape[1],
-                     pr.values.dtype.itemsize)
+        B = x.shape[1]
+        bn_eff = _resolve_bn(n, pr.group_size, B,
+                             pr.values.dtype.itemsize, bn, vmem_budget)
+        _record_pass("rgcsr_spmm", pr, n, m, B,
+                     pr.values.dtype.itemsize,
+                     col_tiles=_n_tiles(B, bn_eff))
         acc = rgcsr_spmm_pallas(jnp.asarray(pr.deltas),
                                 jnp.asarray(pr.values),
                                 jnp.asarray(pr.nnz), x,
-                                interpret=interpret)
-        out = acc.reshape(-1, x.shape[1])[:m]
+                                interpret=interpret, bn=bn_eff,
+                                tile_mode=tile_mode)
+        out = acc.reshape(-1, B)[:m]
     if y is not None:
         out = out + jnp.asarray(y, dtype=out.dtype)
     return out
@@ -339,10 +434,13 @@ def bcsr_spmv(pb: PackedBCSR, x, y=None, *,
     return out
 
 
-def bcsr_spmm(pb: PackedBCSR, x, y=None, *,
-              interpret: bool = True) -> jax.Array:
+def bcsr_spmm(pb: PackedBCSR, x, y=None, *, interpret: bool = True,
+              bn=None, vmem_budget=None,
+              tile_mode: str = "auto") -> jax.Array:
     """Multi-RHS BCSR: Y = A X + Y, X: (n, B). Shares the `spmm`
-    signature; B == 1 delegates to `bcsr_spmv` (bit-identical)."""
+    signature; B == 1 delegates to `bcsr_spmv` (bit-identical).
+    ``bn`` / ``vmem_budget`` / ``tile_mode`` column-tile the B axis
+    exactly as in `spmm` (bit-identical at every tile width)."""
     m, n = pb.shape
     x = jnp.asarray(x, dtype=pb.values.dtype)
     _check_rhs(x, n)
@@ -351,12 +449,17 @@ def bcsr_spmm(pb: PackedBCSR, x, y=None, *,
     if x.shape[1] == 1:
         out = bcsr_spmv(pb, x[:, 0], interpret=interpret)[:, None]
     else:
-        _record_pass("bcsr_spmm", pb, n, m, x.shape[1],
-                     pb.values.dtype.itemsize)
+        B = x.shape[1]
+        bn_eff = _resolve_bn(n, pb.block_shape[0], B,
+                             pb.values.dtype.itemsize, bn, vmem_budget)
+        _record_pass("bcsr_spmm", pb, n, m, B,
+                     pb.values.dtype.itemsize,
+                     col_tiles=_n_tiles(B, bn_eff))
         acc = bcsr_spmm_pallas(jnp.asarray(pb.block_cols),
                                jnp.asarray(pb.values), x,
-                               interpret=interpret)
-        out = acc.reshape(-1, x.shape[1])[:m]
+                               interpret=interpret, bn=bn_eff,
+                               tile_mode=tile_mode)
+        out = acc.reshape(-1, B)[:m]
     if y is not None:
         out = out + jnp.asarray(y, dtype=out.dtype)
     return out

@@ -36,6 +36,11 @@ class PackedMatrix:
     dtype: np.dtype
     lane_width: int
     max_nseg: int           # static loop bound
+    # Block-filled encode (BCSR-dtANS at lane_width == block height):
+    # every in-bounds lane of a slice decodes the SAME column sequence,
+    # so the fused shared-column contraction applies (ops.spmv/spmm
+    # ``fused=`` knob; see dtans_spmv.py ``shared_cols``).
+    shared_cols: bool = False
 
     @property
     def n_slices(self) -> int:
@@ -91,4 +96,7 @@ def pack_matrix(mat: CSRdtANS) -> PackedMatrix:
         dtype=np.dtype(mat.dtype),
         lane_width=L,
         max_nseg=max_nseg,
+        # BCSRdtANS (the only block-filled encode) carries block_shape;
+        # duck-typed so pack.py needs no core.bcsr_dtans import.
+        shared_cols=getattr(mat, "block_shape", None) is not None,
     )

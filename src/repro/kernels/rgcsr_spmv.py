@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.kernels.tiling import blocked_spmm
 from repro.sparse.rgcsr import RGCSR
 
 
@@ -111,22 +112,21 @@ def _rgcsr_spmm_kernel(delta_ref, val_ref, nnz_ref, x_ref, y_ref):
     y_ref[0, :, :] = jnp.sum(contrib, axis=1)                    # (G, B)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def rgcsr_spmm_pallas(deltas, val, nnz, x, interpret=True):
+@functools.partial(jax.jit, static_argnames=("interpret", "bn",
+                                             "tile_mode"))
+def rgcsr_spmm_pallas(deltas, val, nnz, x, interpret=True, bn=None,
+                      tile_mode="auto"):
     """Multi-RHS RGCSR kernel: x is (n, B); returns (S, G, B). The
-    delta prefix-sum runs once per group and feeds all B columns."""
+    delta prefix-sum runs once per group and feeds all B columns.
+    ``bn`` column-tiles the B axis (`repro.kernels.tiling`); blocked
+    output is bitwise equal to the untiled kernel."""
     S, G, Wg = deltas.shape
-    n, B = x.shape
-    return pl.pallas_call(
-        _rgcsr_spmm_kernel,
-        grid=(S,),
-        in_specs=[
-            pl.BlockSpec((1, G, Wg), lambda s: (s, 0, 0)),
-            pl.BlockSpec((1, G, Wg), lambda s: (s, 0, 0)),
-            pl.BlockSpec((1, G), lambda s: (s, 0)),
-            pl.BlockSpec((n, B), lambda s: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, G, B), lambda s: (s, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((S, G, B), val.dtype),
-        interpret=interpret,
-    )(deltas, val, nnz, x)
+    mat_specs = [
+        ((1, G, Wg), lambda s: (s, 0, 0)),
+        ((1, G, Wg), lambda s: (s, 0, 0)),
+        ((1, G), lambda s: (s, 0)),
+    ]
+    return blocked_spmm(_rgcsr_spmm_kernel, (deltas, val, nnz),
+                        mat_specs, x, rows=G, out_dtype=val.dtype,
+                        grid_s=S, bn=bn, tile_mode=tile_mode,
+                        interpret=interpret)

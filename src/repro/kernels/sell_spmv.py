@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.kernels.tiling import blocked_spmm
 from repro.sparse.formats import CSR
 
 
@@ -90,21 +91,19 @@ def _sell_spmm_kernel(idx_ref, val_ref, x_ref, y_ref):
     y_ref[0, :, :] = jnp.sum(contrib, axis=1)                   # (L, B)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def sell_spmm_pallas(idx, val, x, interpret=True):
+@functools.partial(jax.jit, static_argnames=("interpret", "bn",
+                                             "tile_mode"))
+def sell_spmm_pallas(idx, val, x, interpret=True, bn=None,
+                     tile_mode="auto"):
     """Multi-RHS SELL kernel: x is (n, B); returns (S, L, B) — the
-    slice's indices/values load once and contract all B columns."""
+    slice's indices/values load once and contract all B columns.
+    ``bn`` column-tiles the B axis (`repro.kernels.tiling`); blocked
+    output is bitwise equal to the untiled kernel."""
     S, L, Wg = idx.shape
-    n, B = x.shape
-    return pl.pallas_call(
-        _sell_spmm_kernel,
-        grid=(S,),
-        in_specs=[
-            pl.BlockSpec((1, L, Wg), lambda s: (s, 0, 0)),
-            pl.BlockSpec((1, L, Wg), lambda s: (s, 0, 0)),
-            pl.BlockSpec((n, B), lambda s: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, L, B), lambda s: (s, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((S, L, B), val.dtype),
-        interpret=interpret,
-    )(idx, val, x)
+    mat_specs = [
+        ((1, L, Wg), lambda s: (s, 0, 0)),
+        ((1, L, Wg), lambda s: (s, 0, 0)),
+    ]
+    return blocked_spmm(_sell_spmm_kernel, (idx, val), mat_specs, x,
+                        rows=L, out_dtype=val.dtype, grid_s=S, bn=bn,
+                        tile_mode=tile_mode, interpret=interpret)

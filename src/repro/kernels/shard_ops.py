@@ -69,7 +69,8 @@ def _stack_dtans(packs):
     for p in packs:
         if (p.lane_width != p0.lane_width or p.params != p0.params
                 or tuple(p.pattern) != tuple(p0.pattern)
-                or p.esc.shape[0] != p0.esc.shape[0]):
+                or p.esc.shape[0] != p0.esc.shape[0]
+                or p.shared_cols != p0.shared_cols):
             raise ValueError("dtans shards disagree on static layout "
                              "(lane_width / params / tables)")
     arrays = [_pad_stack([p.stream for p in packs]),
@@ -84,20 +85,23 @@ def _stack_dtans(packs):
     static = dict(params=p0.params, pattern=tuple(p0.pattern),
                   lane_width=int(p0.lane_width),
                   max_nseg=max(int(p.max_nseg) for p in packs),
-                  out_dtype=dt)
+                  out_dtype=dt, shared_cols=bool(p0.shared_cols))
     return arrays, static, arrays[0].shape[1] * p0.lane_width, dt
 
 
-def _run_dtans(arrs, x, st, interpret):
+def _run_dtans(arrs, x, st, interpret, tile):
     stream, esc, ns, nnz, sym, dig, base, isesc = arrs
     tabs = (sym, dig, base, isesc)
     kw = dict(params=st["params"], pattern=st["pattern"],
               max_nseg=st["max_nseg"], lane_width=st["lane_width"],
-              out_dtype=st["out_dtype"], interpret=interpret)
+              out_dtype=st["out_dtype"], interpret=interpret,
+              pipeline=tile["pipeline"],
+              shared_cols=st["shared_cols"])
     if x.shape[1] == 1:
         acc = dtans_spmv_pallas(stream, esc, ns, nnz, tabs, x[:, 0], **kw)
         return acc.reshape(-1)[:, None]
-    acc = dtans_spmm_pallas(stream, esc, ns, nnz, tabs, x, **kw)
+    acc = dtans_spmm_pallas(stream, esc, ns, nnz, tabs, x, bn=tile["bn"],
+                            tile_mode=tile["tile_mode"], **kw)
     return acc.reshape(-1, x.shape[1])
 
 
@@ -111,13 +115,14 @@ def _stack_sell(packs):
     return arrays, {}, arrays[0].shape[1] * L, p0.values.dtype
 
 
-def _run_sell(arrs, x, st, interpret):
+def _run_sell(arrs, x, st, interpret, tile):
     idx, val = arrs
     if x.shape[1] == 1:
         return sell_spmv_pallas(idx, val, x[:, 0],
                                 interpret=interpret).reshape(-1)[:, None]
-    return sell_spmm_pallas(idx, val, x,
-                            interpret=interpret).reshape(-1, x.shape[1])
+    return sell_spmm_pallas(idx, val, x, interpret=interpret,
+                            bn=tile["bn"], tile_mode=tile["tile_mode"]
+                            ).reshape(-1, x.shape[1])
 
 
 def _stack_rgcsr(packs):
@@ -131,14 +136,14 @@ def _stack_rgcsr(packs):
     return arrays, {}, arrays[0].shape[1] * G, p0.values.dtype
 
 
-def _run_rgcsr(arrs, x, st, interpret):
+def _run_rgcsr(arrs, x, st, interpret, tile):
     deltas, val, nnz = arrs
     if x.shape[1] == 1:
         return rgcsr_spmv_pallas(deltas, val, nnz, x[:, 0],
                                  interpret=interpret
                                  ).reshape(-1)[:, None]
-    return rgcsr_spmm_pallas(deltas, val, nnz, x,
-                             interpret=interpret
+    return rgcsr_spmm_pallas(deltas, val, nnz, x, interpret=interpret,
+                             bn=tile["bn"], tile_mode=tile["tile_mode"]
                              ).reshape(-1, x.shape[1])
 
 
@@ -152,13 +157,14 @@ def _stack_bcsr(packs):
     return arrays, {}, arrays[0].shape[1] * r, p0.values.dtype
 
 
-def _run_bcsr(arrs, x, st, interpret):
+def _run_bcsr(arrs, x, st, interpret, tile):
     cols, val = arrs
     if x.shape[1] == 1:
         return bcsr_spmv_pallas(cols, val, x[:, 0],
                                 interpret=interpret).reshape(-1)[:, None]
-    return bcsr_spmm_pallas(cols, val, x,
-                            interpret=interpret).reshape(-1, x.shape[1])
+    return bcsr_spmm_pallas(cols, val, x, interpret=interpret,
+                            bn=tile["bn"], tile_mode=tile["tile_mode"]
+                            ).reshape(-1, x.shape[1])
 
 
 #: packed-artifact type -> (stack, run).  A family (or third-party
@@ -199,7 +205,15 @@ def _record_shard_pass(plan, batch: int, *, collective: bool) -> None:
         r.counter("kernels.collectives.psum").add(1)
 
 
-def _loop_spmm(plan, x2, *, interpret: bool):
+def _tile_opts(bn=None, tile_mode="auto", pipeline=False):
+    """The per-shard tile/pipeline knobs threaded into the run
+    adapters.  ``bn`` column-tiles each device's local kernel call
+    (`repro.kernels.tiling`); ``pipeline`` double-buffers the dtANS
+    decode (ignored by the plain families)."""
+    return dict(bn=bn, tile_mode=tile_mode, pipeline=bool(pipeline))
+
+
+def _loop_spmm(plan, x2, *, interpret: bool, tile):
     """Sequential fallback: every shard in turn on one device, rows
     concatenated — no mesh needed, every registered format supported.
 
@@ -224,7 +238,7 @@ def _loop_spmm(plan, x2, *, interpret: bool):
             if rows == 0:
                 continue                  # empty shard: zero rows
             local = [jnp.asarray(a[k]) for a in arrays]
-            blocks.append(run(local, xj, static, interpret)[:rows])
+            blocks.append(run(local, xj, static, interpret, tile)[:rows])
     else:
         from repro.sparse.registry import get_format
         spec = get_format(plan.fmt)
@@ -238,7 +252,7 @@ def _loop_spmm(plan, x2, *, interpret: bool):
     return jnp.concatenate(blocks, axis=0)
 
 
-def _shard_map_spmm(plan, x2, mesh, *, interpret: bool):
+def _shard_map_spmm(plan, x2, mesh, *, interpret: bool, tile):
     """The collective path: stacked shard tensors sharded over the mesh
     ``model`` axis, x broadcast (replicated in-spec), per-device kernel,
     row-masked partials placed at each shard's row offset, psum."""
@@ -258,7 +272,7 @@ def _shard_map_spmm(plan, x2, mesh, *, interpret: bool):
 
     def body(r0_k, rows_k, x, *arrs_k):
         local = [a[0] for a in arrs_k]
-        part = run(local, x, static, interpret).astype(dt)
+        part = run(local, x, static, interpret, tile).astype(dt)
         lane = jax.lax.broadcasted_iota(jnp.int32, (rows_cap, 1), 0)
         part = jnp.where(lane < rows_k[0], part, 0)
         out = jnp.zeros((m_pad, B), dt)
@@ -283,13 +297,17 @@ def _validate_mesh(plan, mesh):
             f"n_shards=model_axis_size(mesh)")
 
 
-def shard_spmm(plan, x, y=None, *, mesh=None,
-               interpret: bool = True) -> jax.Array:
+def shard_spmm(plan, x, y=None, *, mesh=None, interpret: bool = True,
+               bn=None, tile_mode: str = "auto",
+               pipeline: bool = False) -> jax.Array:
     """Y = A X + Y from a shard plan, X: (n, B) — the sharded analogue
     of `ops.spmm`.  With a mesh (model axis == ``plan.n_shards``) and a
     kernel-backed family: `shard_map` + psum; otherwise the sequential
     per-shard loop.  Results are bit-identical to the single-device
-    kernels either way."""
+    kernels either way.  ``bn`` / ``tile_mode`` column-tile each
+    device's local kernel and ``pipeline`` double-buffers the dtANS
+    decode — both pass straight into the per-shard kernels, so the
+    sharded bit-identity contract is the single-device one."""
     m, n = plan.shape
     x2 = jnp.asarray(x)
     if x2.ndim != 2:
@@ -307,17 +325,19 @@ def shard_spmm(plan, x, y=None, *, mesh=None,
         if mesh is not None:
             _validate_mesh(plan, mesh)
         _record_shard_pass(plan, x2.shape[1], collective=collective)
+        tile = _tile_opts(bn=bn, tile_mode=tile_mode, pipeline=pipeline)
         if collective:
-            out = _shard_map_spmm(plan, x2, mesh, interpret=interpret)
+            out = _shard_map_spmm(plan, x2, mesh, interpret=interpret,
+                                  tile=tile)
         else:
-            out = _loop_spmm(plan, x2, interpret=interpret)
+            out = _loop_spmm(plan, x2, interpret=interpret, tile=tile)
     if y is not None:
         out = out + jnp.asarray(y, dtype=out.dtype)
     return out
 
 
-def shard_spmv(plan, x, y=None, *, mesh=None,
-               interpret: bool = True) -> jax.Array:
+def shard_spmv(plan, x, y=None, *, mesh=None, interpret: bool = True,
+               pipeline: bool = False) -> jax.Array:
     """y = A x + y from a shard plan, 1-D ``x`` — the sharded analogue
     of `ops.spmv`.  Routes through the spmv kernels (B == 1), so the
     result is bit-identical to the single-device `ops.spmv`."""
@@ -325,7 +345,7 @@ def shard_spmv(plan, x, y=None, *, mesh=None,
     if x1.ndim != 1:
         raise ValueError(f"shard_spmv expects 1-D x; got {x1.shape}")
     out = shard_spmm(plan, x1[:, None], mesh=mesh,
-                     interpret=interpret)[:, 0]
+                     interpret=interpret, pipeline=pipeline)[:, 0]
     if y is not None:
         out = out + jnp.asarray(y, dtype=out.dtype)
     return out

@@ -46,6 +46,18 @@ def forward(params, cfg: ArchConfig, batch):
     return _mod(cfg).forward(params, cfg, batch)
 
 
+def forward_hidden(params, cfg: ArchConfig, batch):
+    """(hidden, aux): the LM-head input over all token positions — for
+    callers that supply their own unembed (e.g. a compressed
+    `SparseLinear` head contracting all B*S rows through the blocked
+    SpMM kernel). Transformer families only."""
+    m = _mod(cfg)
+    if not hasattr(m, "forward_hidden"):
+        raise NotImplementedError(
+            f"family {cfg.family!r} has no forward_hidden")
+    return m.forward_hidden(params, cfg, batch)
+
+
 def loss_fn(params, cfg: ArchConfig, batch):
     """Masked next-token cross entropy (+ MoE load-balance aux)."""
     logits, aux = forward(params, cfg, batch)

@@ -70,8 +70,11 @@ def _embed_inputs(cfg: ArchConfig, params, batch):
     return x
 
 
-def forward(params, cfg: ArchConfig, batch):
-    """Training/eval forward. Returns (logits over token positions, aux)."""
+def forward_hidden(params, cfg: ArchConfig, batch):
+    """Training/eval hidden states: the (B, S, d_model) LM-head input
+    (post final norm). Returns (hidden, aux) — `forward` is
+    ``lm_head(params["embed"], hidden)``; callers that swap the unembed
+    for a compressed head (`repro.serving.SparseLinear`) start here."""
     x = _embed_inputs(cfg, params, batch)
     B, S, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
@@ -87,6 +90,12 @@ def forward(params, cfg: ArchConfig, batch):
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     if cfg.family == "vlm" and "frontend" in batch:
         x = x[:, batch["frontend"].shape[1]:, :]      # text positions only
+    return x, aux
+
+
+def forward(params, cfg: ArchConfig, batch):
+    """Training/eval forward. Returns (logits over token positions, aux)."""
+    x, aux = forward_hidden(params, cfg, batch)
     return lm_head(params["embed"], x), aux
 
 

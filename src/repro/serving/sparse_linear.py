@@ -147,7 +147,8 @@ class SparseLinear:
     def compression_vs_best_sparse(self) -> float:
         return self.baseline_bytes / self.mat.nbytes
 
-    def apply(self, x, *, interpret: bool = True,
+    def apply(self, x, *, interpret: bool = True, bn=None,
+              pipeline: bool = False,
               metrics: obs.MetricsRegistry | None = None):
         """x: (..., d_in) -> (..., d_out).
 
@@ -158,6 +159,15 @@ class SparseLinear:
         single-vector kernel and is bit-identical to `ops.spmv`).
         Accumulation happens in the packed matrix's dtype
         (`ops.out_dtype`) — a float64 weight contracts in float64.
+
+        Large batches route through the grid-blocked path
+        automatically: `ops.spmm` column-tiles the RHS when the
+        flattened batch's x/y working set overflows the kernel VMEM
+        budget (`repro.kernels.tiling.choose_bn`), so a training-shaped
+        ``B = batch * seq`` pool never needs x/y resident whole — and
+        the blocked result is bit-identical to the unblocked kernel.
+        ``bn`` pins the column-tile width explicitly; ``pipeline``
+        double-buffers the entropy decode behind the contraction.
 
         ``metrics``: registry the ``serving.*`` instruments land in
         (the process default when omitted). Callers that isolate their
@@ -178,10 +188,11 @@ class SparseLinear:
                 from repro.kernels import shard_ops
                 y = shard_ops.shard_spmm(self.plan, xb.T,
                                          mesh=self.mesh,
-                                         interpret=interpret)
+                                         interpret=interpret,
+                                         bn=bn, pipeline=pipeline)
             else:
-                y = ops.spmm(self.packed, xb.T,
-                             interpret=interpret)  # (d_out, B)
+                y = ops.spmm(self.packed, xb.T, interpret=interpret,
+                             bn=bn, pipeline=pipeline)  # (d_out, B)
         return y.T.reshape(*lead, self.d_out).astype(x.dtype)
 
     def apply_dense_reference(self, x):

@@ -311,14 +311,33 @@ class FormatSpec:
         kernel by overriding only this property."""
         return None
 
-    def spmm_runner(self, packed, x, *, interpret: bool = True):
+    def spmm_runner(self, packed, x, *, interpret: bool = True,
+                    bn=None, tile_mode: str = "auto",
+                    pipeline: bool = False):
         """Zero-arg callable computing ``Y = A X`` (``X: (n, B)``) from
         `pack`'s artifact — the batched analogue of `runner`, driven by
         the timing harness (``measure.spmv_runner(batch=B)``), the
-        conformance suite and serving."""
+        conformance suite and serving.
+
+        ``bn`` / ``tile_mode`` column-tile the RHS through the kernel
+        entry point (`repro.kernels.tiling`) and ``pipeline``
+        double-buffers the entropy decode — kernel-backed families
+        only.  The per-column fallback ignores ``bn`` (a column loop is
+        already maximally tiled) and rejects ``pipeline`` for formats
+        with nothing to decode, so third-party specs join unchanged."""
         fn = self.spmm_fn
+        if pipeline and not self.decodes:
+            raise ValueError(f"{self.name}: pipeline= only applies to "
+                             "entropy-decoding formats")
         if fn is not None:
-            return lambda: fn(packed, x, interpret=interpret)
+            kw = {}
+            if bn is not None:
+                kw["bn"] = bn
+            if tile_mode != "auto":
+                kw["tile_mode"] = tile_mode
+            if pipeline:
+                kw["pipeline"] = True
+            return lambda: fn(packed, x, interpret=interpret, **kw)
         x2 = np.asarray(x)
         if x2.ndim != 2:
             raise ValueError(f"{self.name}: spmm_runner expects x of "
@@ -330,11 +349,16 @@ class FormatSpec:
                                  axis=-1)
 
     def spmm(self, a, x, *, params: DtansParams = PAPER,
-             interpret: bool = True, **knobs):
+             interpret: bool = True, bn=None, tile_mode: str = "auto",
+             pipeline: bool = False, **knobs):
         """One-shot ``Y = A X`` through the registered batched kernel
-        path — how the conformance suite sweeps every format over B."""
+        path — how the conformance suite sweeps every format over B
+        (and, with ``bn`` / ``pipeline``, over the tiled and pipelined
+        schedules, pinned bit-identical to the plain kernel)."""
         packed = self.pack(a, params=params, **knobs)
-        return self.spmm_runner(packed, x, interpret=interpret)()
+        return self.spmm_runner(packed, x, interpret=interpret, bn=bn,
+                                tile_mode=tile_mode,
+                                pipeline=pipeline)()
 
     # -- sharding (multi-device row partition) -----------------------
 
@@ -384,7 +408,8 @@ class FormatSpec:
                          dtype=np.dtype(a.values.dtype))
 
     def shard_runner(self, plan, x, *, mesh=None,
-                     interpret: bool = True):
+                     interpret: bool = True, bn=None,
+                     tile_mode: str = "auto", pipeline: bool = False):
         """Zero-arg callable computing ``y = A x`` (1-D ``x``) or
         ``Y = A X`` (2-D ``x``) from a `shard` plan — the sharded
         analogue of `runner` / `spmm_runner`.  With a ``mesh`` whose
@@ -398,11 +423,13 @@ class FormatSpec:
         from repro.kernels import shard_ops
         x2 = np.asarray(x)
         if x2.ndim == 1:
-            return lambda: shard_ops.shard_spmv(plan, x,
-                                                mesh=mesh,
-                                                interpret=interpret)
+            return lambda: shard_ops.shard_spmv(plan, x, mesh=mesh,
+                                                interpret=interpret,
+                                                pipeline=pipeline)
         return lambda: shard_ops.shard_spmm(plan, x, mesh=mesh,
-                                            interpret=interpret)
+                                            interpret=interpret,
+                                            bn=bn, tile_mode=tile_mode,
+                                            pipeline=pipeline)
 
     # -- encoded artifact (decodes=True formats) ---------------------
 
@@ -551,10 +578,13 @@ class DenseSpec(FormatSpec):
         xj = jnp.asarray(x, dtype=d.dtype)
         return jax.jit(lambda: d @ xj)
 
-    def spmm_runner(self, packed, x, *, interpret: bool = True):
+    def spmm_runner(self, packed, x, *, interpret: bool = True,
+                    bn=None, tile_mode: str = "auto",
+                    pipeline: bool = False):
         # Dense ``A @ X`` is the same contraction for any number of
         # right-hand sides — the single-vector runner already is the
-        # batched bandwidth anchor.
+        # batched bandwidth anchor.  XLA tiles the contraction itself,
+        # so the tile knobs are accepted and ignored.
         return self.runner(packed, x, interpret=interpret)
 
 
@@ -590,9 +620,12 @@ class _RowSeqSpec(FormatSpec):
 
         return run
 
-    def spmm_runner(self, packed, x, *, interpret: bool = True):
+    def spmm_runner(self, packed, x, *, interpret: bool = True,
+                    bn=None, tile_mode: str = "auto",
+                    pipeline: bool = False):
         # Batched scatter-add stand-in: one (m, B) accumulator, the
         # same row scatter, every RHS column updated per nonzero.
+        # Tile knobs accepted and ignored (XLA-lowered, no VMEM grid).
         import jax
         import jax.numpy as jnp
         a = packed

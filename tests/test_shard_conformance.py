@@ -104,6 +104,29 @@ def test_sharded_mesh_bit_identical(case, fmt, n_shards, batch,
         f"at shards={n_shards} B={batch}")
 
 
+@pytest.mark.parametrize("fmt", _format_names())
+def test_sharded_blocked_bit_identical(fmt):
+    """Grid-blocked RHS through the sharded loop path: a training-shaped
+    B = 64 pool with an explicit ragged bn (24 does not divide 64) and —
+    for the entropy-decoding families — the pipelined decode must both
+    equal the unblocked sharded pass exactly.  One plan per format; the
+    tile knobs thread through `shard_spmm` -> per-shard run adapters ->
+    the same kernels the single-device blocked conformance pins."""
+    spec = get_format(fmt)
+    a = _case("powerlaw")
+    x = _rhs(a, 64)
+    plan = spec.shard(a, 2, **spec.conformance_knobs)
+    base = np.asarray(shard_ops.shard_spmm(plan, x))
+    got = np.asarray(shard_ops.shard_spmm(plan, x, bn=24))
+    assert np.array_equal(got, base), (
+        f"{fmt}: sharded blocked pass (bn=24) diverges at B=64")
+    if spec.decodes:
+        pip = np.asarray(shard_ops.shard_spmm(plan, x, pipeline=True,
+                                              bn=24))
+        assert np.array_equal(pip, base), (
+            f"{fmt}: sharded pipelined+blocked pass diverges at B=64")
+
+
 @pytest.mark.parametrize("n_shards", SHARDS,
                          ids=[f"S{k}" for k in SHARDS])
 def test_ops_mesh_knob_bit_identical(n_shards, make_model_mesh):

@@ -394,3 +394,159 @@ def test_ops_spmm_empty_batch(entry):
     _, spmm_fn = OPS_SPMM[entry]
     got = np.asarray(spmm_fn(a, X, None))
     assert got.shape == (a.shape[0], 0)
+
+
+# --------------------------------------------------------------------------
+# Grid-blocked / pipelined schedules: EXACT bit-identity against the
+# plain kernels. Column tiling splits only the B axis — per-column
+# arithmetic is untouched — so the pin is ``==``, not allclose, at
+# every bn, both tile drivers, and under the pipelined decode.
+# --------------------------------------------------------------------------
+
+#: Serving- and training-pool sizes forced through the blocked path
+#: (bn=16 splits them into 4 / 16 column tiles, ragged tail included
+#: via the non-multiple 2nd case at bn=24).
+BLOCKED_BATCHES = (64, 256)
+
+
+@functools.lru_cache(maxsize=None)
+def _blocked_pack(fmt, dtype_name):
+    """One packed artifact per (format, dtype) for the blocked sweep —
+    the encode is the expensive part, and the tiling contract is about
+    the kernel schedule, not the encode."""
+    from repro.sparse.registry import get_format
+    spec = get_format(fmt)
+    d = CORPUS["powerlaw"]().astype(np.dtype(dtype_name))
+    a = CSR.from_dense(d)
+    return spec, a, spec.pack(a, **spec.conformance_knobs)
+
+
+@pytest.mark.parametrize("fmt", [s.name for s in iter_formats()])
+@pytest.mark.parametrize("B", BLOCKED_BATCHES,
+                         ids=[f"B{b}" for b in BLOCKED_BATCHES])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64],
+                         ids=["f32", "f64"])
+def test_spmm_blocked_bit_identical(fmt, B, dtype):
+    """Every registered format, both dtypes: the grid-blocked SpMM
+    (bn-column tiles, ragged tail included — 24 divides neither pool)
+    returns the same BITS as the unblocked kernel. Formats without a
+    fused kernel take the per-column fallback, which ignores bn — the
+    toy third-party spec contract (tests/test_registry.py) joins
+    unchanged."""
+    spec, a, packed = _blocked_pack(fmt, np.dtype(dtype).name)
+    rng = np.random.default_rng(23)
+    X = rng.standard_normal((a.shape[1], B)).astype(dtype)
+    base = np.asarray(spec.spmm_runner(packed, X)())
+    blocked = np.asarray(spec.spmm_runner(packed, X, bn=24)())
+    assert np.array_equal(base, blocked), \
+        f"{fmt} blocked bn=24 is not bit-identical at B={B}"
+
+
+@pytest.mark.parametrize("entry", list(OPS_SPMM), ids=list(OPS_SPMM))
+@pytest.mark.parametrize("tile_mode", ["loop", "grid"])
+def test_ops_spmm_tile_modes_bit_identical(entry, tile_mode):
+    """Both blocked drivers — the lax.map column loop and the 2-D
+    pallas grid (what Mosaic double-buffers on hardware) — produce the
+    same bits as the unblocked kernel, through the ops entry points."""
+    d = CORPUS["powerlaw"]().astype(np.float32)
+    a = CSR.from_dense(d)
+    rng = np.random.default_rng(29)
+    X = rng.standard_normal((a.shape[1], 64)).astype(np.float32)
+    _, spmm_fn = OPS_SPMM[entry]
+    base = np.asarray(spmm_fn(a, X, None))
+    builders = {
+        "ops.spmm": lambda: ops.spmm(encode_matrix(a, lane_width=16), X,
+                                     bn=16, tile_mode=tile_mode),
+        "ops.sell_spmm": lambda: ops.sell_spmm(
+            pack_sell(a, lane_width=16), X, bn=16, tile_mode=tile_mode),
+        "ops.rgcsr_spmm": lambda: ops.rgcsr_spmm(
+            pack_rgcsr(RGCSR.from_csr(a, 8)), X, bn=16,
+            tile_mode=tile_mode),
+        "ops.bcsr_spmm": lambda: ops.bcsr_spmm(
+            pack_bcsr(BCSR.from_csr(a, (4, 4))), X, bn=16,
+            tile_mode=tile_mode),
+    }
+    blocked = np.asarray(builders[entry]())
+    assert np.array_equal(base, blocked), \
+        f"{entry} tile_mode={tile_mode} is not bit-identical"
+
+
+@pytest.mark.parametrize("fmt", ["dtans", "rgcsr_dtans", "bcsr_dtans"])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64],
+                         ids=["f32", "f64"])
+def test_spmm_pipelined_bit_identical(fmt, dtype):
+    """The double-buffered decode (prologue + decode-ahead loop) is a
+    pure reordering of the same segment_step sequence — pinned
+    bit-identical for every entropy-decoding family, alone and
+    composed with column tiling."""
+    spec, a, packed = _blocked_pack(fmt, np.dtype(dtype).name)
+    rng = np.random.default_rng(31)
+    X = rng.standard_normal((a.shape[1], 64)).astype(dtype)
+    base = np.asarray(spec.spmm_runner(packed, X)())
+    piped = np.asarray(spec.spmm_runner(packed, X, pipeline=True)())
+    assert np.array_equal(base, piped), f"{fmt} pipelined != plain"
+    both = np.asarray(spec.spmm_runner(packed, X, pipeline=True,
+                                       bn=16)())
+    assert np.array_equal(base, both), f"{fmt} pipelined+blocked != plain"
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64],
+                         ids=["f32", "f64"])
+def test_bcsr_dtans_fused_bit_identical(dtype):
+    """The fused BCSR-dtANS block-decode contraction (one shared
+    column gather per block row, `shared_cols`) returns the same bits
+    as the generic per-lane gather path, spmv and spmm."""
+    d = CORPUS["regular"]().astype(dtype)
+    a = CSR.from_dense(d)
+    pm = pack_matrix(encode_bcsr_matrix(a, block_shape=(2, 2)))
+    assert pm.shared_cols, "BCSR-dtANS pack should mark shared_cols"
+    rng = np.random.default_rng(37)
+    X = rng.standard_normal((a.shape[1], 16)).astype(dtype)
+    generic = np.asarray(ops.spmm(pm, X, fused=False))
+    fused = np.asarray(ops.spmm(pm, X))      # fused=None -> auto-on
+    assert np.array_equal(generic, fused), "fused spmm != generic"
+    x = X[:, 0]
+    gv = np.asarray(ops.spmv(pm, x, fused=False))
+    fv = np.asarray(ops.spmv(pm, x, fused=True))
+    assert np.array_equal(gv, fv), "fused spmv != generic"
+
+
+def test_fused_rejected_without_shared_cols():
+    """fused=True on a plain (non-block-filled) CSR-dtANS pack is a
+    loud error, not a silent wrong answer."""
+    a = CSR.from_dense(CORPUS["regular"]())
+    pm = pack_matrix(encode_matrix(a, lane_width=16))
+    x = np.ones((a.shape[1], 4), dtype=np.float32)
+    with pytest.raises(ValueError, match="block-filled"):
+        ops.spmm(pm, x, fused=True)
+
+
+@pytest.mark.parametrize("entry", list(OPS_SPMM), ids=list(OPS_SPMM))
+def test_ops_spmm_large_B_tiled(entry):
+    """B = 4096 runs through every kernel-backed family with a forced
+    tiny VMEM budget — x/y never resident whole (the budget admits
+    only a fraction of the pool per tile) — and stays bit-identical to
+    the unblocked kernel."""
+    d = CORPUS["regular"]().astype(np.float32)
+    a = CSR.from_dense(d)
+    rng = np.random.default_rng(41)
+    B = 4096
+    X = rng.standard_normal((a.shape[1], B)).astype(np.float32)
+    budget = 512 * 1024        # forces bn << B for these shapes
+    builders = {
+        "ops.spmm": lambda **kw: ops.spmm(
+            encode_matrix(a, lane_width=16), X, **kw),
+        "ops.sell_spmm": lambda **kw: ops.sell_spmm(
+            pack_sell(a, lane_width=16), X, **kw),
+        "ops.rgcsr_spmm": lambda **kw: ops.rgcsr_spmm(
+            pack_rgcsr(RGCSR.from_csr(a, 8)), X, **kw),
+        "ops.bcsr_spmm": lambda **kw: ops.bcsr_spmm(
+            pack_bcsr(BCSR.from_csr(a, (4, 4))), X, **kw),
+    }
+    from repro.kernels.tiling import choose_bn
+    bn = choose_bn(a.shape[1], 16, B, 4, budget)
+    assert bn is not None and bn < B, "budget did not force tiling"
+    base = np.asarray(builders[entry]())
+    tiled = np.asarray(builders[entry](vmem_budget=budget))
+    assert np.array_equal(base, tiled), \
+        f"{entry} at B={B} tiled under budget != unblocked"

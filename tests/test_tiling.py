@@ -1,0 +1,248 @@
+"""Unit tests for the grid-blocked SpMM schedule (`repro.kernels.tiling`):
+the VMEM-budget tile sizer, the obs accounting contract (x/y bytes land
+once per PASS, never per column tile), the cost model's capacity term,
+and the `SparseLinear` / `forward_hidden` sparse-head wiring at
+training-shaped batch."""
+
+import numpy as np
+import pytest
+
+from repro.kernels import ops, pack
+from repro.kernels.tiling import (DEFAULT_VMEM_BYTES, LANE, MIN_BN,
+                                  TILE_FRACTION, choose_bn, n_col_tiles,
+                                  resolve_tile_mode)
+from repro.sparse.formats import CSR
+
+
+def _sparse(m, n, density=0.1, dtype=np.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, n)).astype(dtype)
+    a[rng.random((m, n)) > density] = 0
+    return a
+
+
+# --------------------------------------------------------------------------
+# choose_bn: the VMEM-budget column-tile sizer.
+# --------------------------------------------------------------------------
+
+
+class TestChooseBn:
+    def test_small_batch_untiled(self):
+        """A pool whose x/y working set fits the budget never tiles."""
+        assert choose_bn(1024, 128, 8, 4) is None
+        assert choose_bn(1024, 128, 1, 4) is None
+
+    def test_large_batch_tiles(self):
+        """A pool that overflows the budget gets a bn < B."""
+        bn = choose_bn(1024, 128, 1 << 20, 4)
+        assert bn is not None and bn < (1 << 20)
+
+    def test_budget_scales_bn(self):
+        """Halving the budget can only shrink the tile."""
+        n, rows, B, vb = 4096, 128, 65536, 4
+        big = choose_bn(n, rows, B, vb, DEFAULT_VMEM_BYTES)
+        small = choose_bn(n, rows, B, vb, DEFAULT_VMEM_BYTES // 2)
+        assert small is not None and big is not None
+        assert small <= big
+
+    def test_lane_snap(self):
+        """Tiles at least one lane wide snap DOWN to a lane multiple
+        (the (8, 128) register tile shape of the accelerator)."""
+        for budget in (10 ** 6, 10 ** 7, 10 ** 8):
+            bn = choose_bn(4096, 128, 1 << 22, 4, budget)
+            if bn is not None and bn >= LANE:
+                assert bn % LANE == 0
+
+    def test_min_bn_floor(self):
+        """Even an absurdly small budget yields a usable tile."""
+        bn = choose_bn(1 << 20, 128, 1 << 20, 8, 1024)
+        assert bn == MIN_BN
+
+    def test_fits_budget(self):
+        """The chosen tile's x/y columns fit the budgeted fraction
+        (above the MIN_BN floor, where the budget is authoritative)."""
+        n, rows, vb = 8192, 128, 4
+        budget = 2 ** 22
+        bn = choose_bn(n, rows, 1 << 22, vb, budget)
+        assert bn is not None
+        if bn > MIN_BN:
+            assert bn * (n + rows) * vb <= budget * TILE_FRACTION
+
+    def test_n_col_tiles_consistent(self):
+        """n_col_tiles == ceil(B / choose_bn), 1 when untiled."""
+        assert n_col_tiles(1024, 128, 8, 4) == 1
+        B = 1 << 20
+        bn = choose_bn(1024, 128, B, 4)
+        assert n_col_tiles(1024, 128, B, 4) == -(-B // bn)
+
+    def test_rejects_bad_bn(self):
+        pm = pack.pack_matrix(_encode_small())
+        x = np.ones((pm.shape[1], 4), np.float32)
+        with pytest.raises(ValueError):
+            ops.spmm(pm, x, bn=0)
+
+    def test_resolve_tile_mode(self):
+        assert resolve_tile_mode("auto", True) == "loop"
+        assert resolve_tile_mode("auto", False) == "grid"
+        assert resolve_tile_mode("loop", False) == "loop"
+        assert resolve_tile_mode("grid", True) == "grid"
+        with pytest.raises(ValueError):
+            resolve_tile_mode("diagonal", True)
+
+
+def _encode_small():
+    from repro.core.csr_dtans import encode_matrix
+    return encode_matrix(CSR.from_dense(_sparse(32, 24)), lane_width=16)
+
+
+# --------------------------------------------------------------------------
+# Obs accounting: bytes are per PASS, invariant to the tile count.
+# --------------------------------------------------------------------------
+
+
+class TestObsTileAccounting:
+    def _deltas(self, bn):
+        """Counter/histogram deltas of one ops.spmm pass at this bn."""
+        from repro import obs
+        reg = obs.default_registry()
+        pm = pack.pack_matrix(_encode_small())
+        x = np.ones((pm.shape[1], 32), np.float32)
+        before = reg.snapshot()
+        ops.spmm(pm, x, bn=bn)
+        after = reg.snapshot()
+        dc = {k: v - before["counters"].get(k, 0)
+              for k, v in after["counters"].items()}
+        hb = before["histograms"].get("kernels.col_tiles", {"count": 0})
+        ha = after["histograms"].get("kernels.col_tiles",
+                                     {"count": 0, "max": 0})
+        return dc, ha["count"] - hb["count"], ha.get("max")
+
+    def test_bytes_invariant_to_bn(self):
+        """x/y/matrix byte counters record the PASS, not the schedule:
+        a 4-way column-tiled pass reports exactly the bytes of the
+        untiled pass (satellite contract of `ops._record_pass`)."""
+        base, _, _ = self._deltas(None)
+        tiled, _, _ = self._deltas(8)
+        byte_keys = [k for k in base if "bytes" in k]
+        assert byte_keys, "no byte counters recorded?"
+        for name in byte_keys:
+            assert tiled.get(name) == base[name], \
+                f"{name} changed under column tiling"
+
+    def test_col_tiles_histogram(self):
+        """The tile count itself IS recorded — as a histogram
+        observation, not a byte counter."""
+        _, dcount, hmax = self._deltas(8)
+        # max is cumulative across the process registry, so >=: this
+        # pass observed ceil(32 / 8) = 4 tiles
+        assert dcount == 1 and hmax >= 4.0
+
+
+# --------------------------------------------------------------------------
+# Cost model: the VMEM-capacity tile term.
+# --------------------------------------------------------------------------
+
+
+class TestCostModelTileTerm:
+    def test_spmm_bytes_charges_matrix_per_tile(self):
+        from repro.autotune.cost_model import spmm_bytes
+        one = spmm_bytes(1000, 64, 32, 4, batch=8, col_tiles=1)
+        four = spmm_bytes(1000, 64, 32, 4, batch=8, col_tiles=4)
+        assert four - one == 3 * 1000          # matrix re-read 3 extra times
+        assert spmm_bytes(1000, 64, 32, 4, 8) == one   # default unchanged
+
+    def test_work_time_decode_scales_with_tiles(self):
+        from repro.autotune.cost_model import V5E, work_time
+        from repro.sparse.registry import CostTerms
+        t = CostTerms(lockstep=1e6, decode=1e6)
+        t1 = work_time(t, V5E, batch=8, col_tiles=1)
+        t4 = work_time(t, V5E, batch=8, col_tiles=4)
+        assert t4 > t1                          # re-decode per tile
+        plain = CostTerms(lockstep=1e6)
+        assert work_time(plain, V5E, 8, 1) == work_time(plain, V5E, 8, 4)
+
+    def test_candidate_time_monotone_in_batch_past_capacity(self):
+        """Once the batch overflows VMEM, candidate_time keeps growing
+        (the re-decode term) rather than amortizing forever."""
+        from repro.autotune.cost_model import candidate_time
+        from repro.autotune.fingerprint import fingerprint
+        a = CSR.from_dense(_sparse(64, 48))
+        fp = fingerprint(a)
+        ts = [candidate_time(fp, "dtans", 4000, warm=True, batch=b)
+              for b in (1, 1 << 12, 1 << 16, 1 << 20)]
+        assert all(b < c for b, c in zip(ts, ts[1:]))
+
+    def test_machine_signature_includes_vmem(self):
+        """Recalibrating vmem_bytes must invalidate cached decisions."""
+        import dataclasses
+        from repro.autotune.cost_model import V5E
+        other = dataclasses.replace(V5E, vmem_bytes=2 * V5E.vmem_bytes)
+        assert other.signature() != V5E.signature()
+
+    def test_from_dict_roundtrip(self):
+        from repro.autotune.cost_model import MachineModel, V5E
+        assert MachineModel.from_dict(V5E.to_dict()) == V5E
+
+
+# --------------------------------------------------------------------------
+# Serving + models: the sparse LM head at training-shaped batch.
+# --------------------------------------------------------------------------
+
+
+class TestSparseHeadWiring:
+    def test_sparse_linear_blocked_bit_identical(self):
+        """SparseLinear.apply with an explicit bn (and the pipelined
+        decode) matches the default path bit-for-bit."""
+        from repro.serving.sparse_linear import SparseLinear
+        rng = np.random.default_rng(5)
+        w = rng.standard_normal((48, 40)).astype(np.float32)
+        layer = SparseLinear.from_dense(w, sparsity=0.6, lane_width=16)
+        x = rng.standard_normal((24, 48)).astype(np.float32)
+        base = np.asarray(layer.apply(x))
+        assert np.array_equal(base, np.asarray(layer.apply(x, bn=8)))
+        assert np.array_equal(base,
+                              np.asarray(layer.apply(x, pipeline=True)))
+
+    def test_train_lm_sparse_head_eval(self):
+        """The example's sparse-head eval runs a training-shaped
+        B = batch * seq pool through the head and tracks the dense
+        loss (exactly at sparsity 0 up to quantization)."""
+        import jax
+        import sys
+        sys.path.insert(0, "examples")
+        from train_lm import sparse_head_eval
+        from repro.configs import get_smoke
+        from repro.models import api
+        cfg = get_smoke("smollm-135m").with_(vocab=128)
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        B, S = 2, 16
+        batch = {
+            "inputs": rng.integers(0, cfg.vocab, (B, S)).astype(np.int32),
+            "targets": rng.integers(0, cfg.vocab, (B, S)).astype(np.int32),
+            "mask": np.ones((B, S), np.float32),
+        }
+        dense, sparse, head = sparse_head_eval(params, cfg, batch,
+                                               sparsity=0.3)
+        assert np.isfinite(dense) and np.isfinite(sparse)
+        assert head.d_out == cfg.vocab
+        # an untrained model scores near uniform; the compressed head
+        # must stay in the same regime, not diverge
+        assert abs(sparse - dense) < 1.0
+
+    def test_forward_hidden_matches_forward(self):
+        """forward == lm_head(embed, forward_hidden) — the seam the
+        sparse head replaces."""
+        import jax
+        from repro.configs import get_smoke
+        from repro.models import api
+        from repro.models.layers import lm_head
+        cfg = get_smoke("smollm-135m").with_(vocab=64)
+        params = api.init_params(cfg, jax.random.PRNGKey(1))
+        rng = np.random.default_rng(2)
+        batch = {"inputs": rng.integers(0, 64, (2, 8)).astype(np.int32)}
+        hidden, _ = api.forward_hidden(params, cfg, batch)
+        logits, _ = api.forward(params, cfg, batch)
+        np.testing.assert_array_equal(
+            np.asarray(lm_head(params["embed"], hidden)),
+            np.asarray(logits))
